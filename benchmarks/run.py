@@ -1,0 +1,27 @@
+"""Benchmark driver: one function per paper table/figure + software
+benches.  Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    from benchmarks import paper_tables, software_bench
+    suites = list(paper_tables.ALL)
+    if "--paper-only" not in sys.argv:
+        suites += list(software_bench.ALL)
+    print("name,us_per_call,derived")
+    failures = []
+    for fn in suites:
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:                      # pragma: no cover
+            failures.append((fn.__name__, repr(e)))
+            print(f"{fn.__name__},ERROR,{e!r}")
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Software-path benchmarks: kernels, policies, end-to-end steps.
+
+CPU wall-times are *relative* signals (the TPU target is modeled by the
+roofline); what these benches pin down is the policy overhead structure
+(quantize cost vs matmul cost) and the end-to-end step viability.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.core import get_policy
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.distributed.step import make_train_step
+from repro.models import build_model
+from repro.optim import adamw
+
+
+def _time(fn, reps=5):
+    out = fn()
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def dpa_dot_policies():
+    """fake-quant DPA dot cost by policy vs plain f32 (jit, CPU)."""
+    from repro.core.linear import dpa_dot
+    rows = []
+    x = jax.random.normal(jax.random.PRNGKey(0), (512, 1024), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (1024, 1024), jnp.float32)
+    base = None
+    for pol in ("fp32", "bf16_dpa", "fp16_dpa", "fp8_dpa", "fp4_dpa"):
+        p = get_policy(pol)
+        f = jax.jit(lambda x, w, p=p: dpa_dot(x, w, p))
+        us = _time(lambda: f(x, w))
+        base = base or us
+        rows.append((f"sw/dpa_dot_{pol}", us, f"vs_fp32={us/base:.2f}x"))
+    return rows
+
+
+def pallas_kernels():
+    rows = []
+    from repro.kernels import ops as O
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 512), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512, 256), jnp.float32)
+    pol = get_policy("fp8_dpa")
+    us = _time(lambda: O.dpa_matmul(x, w, pol), reps=2)
+    rows.append(("sw/pallas_dpa_matmul_interpret", us,
+                 "interpret-mode (TPU target: MXU fp8)"))
+    us = _time(lambda: O.quantize_rows(x, "fp8_e4m3"), reps=2)
+    rows.append(("sw/pallas_quantize_rows_interpret", us, ""))
+    q = jax.random.normal(jax.random.PRNGKey(2), (1, 8, 256, 64))
+    kv = jax.random.normal(jax.random.PRNGKey(3), (1, 2, 256, 64))
+    us = _time(lambda: O.flash_attention(q, kv, kv), reps=2)
+    rows.append(("sw/pallas_flash_attention_interpret", us, "gqa 8:2"))
+    return rows
+
+
+def e2e_train_step():
+    """Reduced-config train step by family (jit, CPU)."""
+    rows = []
+    for arch in ("llama3.2-3b", "granite-moe-1b-a400m",
+                 "recurrentgemma-9b", "xlstm-1.3b"):
+        cfg = reduce_config(get_config(arch))
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        state = {"params": params, "opt": adamw.init(params)}
+        pipe = make_pipeline(DataConfig(
+            vocab_size=cfg.vocab_size, batch=4, seq=64,
+            frontend=cfg.frontend, d_model=cfg.d_model,
+            frames=16 if cfg.family == "encdec" else 0))
+        step = jax.jit(make_train_step(model, adamw.AdamWConfig()))
+        batch = pipe.batch(0)
+        state, _ = step(state, batch)          # compile
+        t0 = time.perf_counter()
+        for i in range(3):
+            state, m = step(state, pipe.batch(i + 1))
+        jax.block_until_ready(state)
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append((f"sw/train_step_{arch}", us,
+                     f"loss={float(m['loss']):.3f}"))
+    return rows
+
+
+def e2e_decode_step():
+    rows = []
+    cfg = reduce_config(get_config("qwen3-4b"))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    from repro.distributed.step import make_serve_step
+    serve = jax.jit(make_serve_step(model), donate_argnums=(2,))
+    caches = model.init_caches(8, 128)
+    batch = {"tokens": jnp.ones((8, 1), jnp.int32), "index": jnp.int32(5)}
+    tok, caches = serve(params, batch, caches)   # compile
+    t0 = time.perf_counter()
+    for i in range(10):
+        tok, caches = serve(params, {"tokens": tok[:, None],
+                                     "index": jnp.int32(6 + i)}, caches)
+    jax.block_until_ready(tok)
+    us = (time.perf_counter() - t0) / 10 * 1e6
+    rows.append(("sw/decode_step_qwen3-4b-reduced", us, "batch=8 ctx=128"))
+    return rows
+
+
+ALL = [dpa_dot_policies, pallas_kernels, e2e_train_step, e2e_decode_step]

@@ -1,0 +1,10 @@
+"""Batched serving example: greedy decode with KV caches under the fp8
+DPA policy (weights ride the narrow wires, accumulation stays FP32).
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "qwen3-4b", "--reduced", "--batch", "4",
+          "--prompt-len", "16", "--gen", "16", "--policy", "fp8_dpa"])

@@ -1,0 +1,5 @@
+from .base import (ARCH_MODULES, LONG_CTX_ARCHS, SHAPES, cell_applicable,
+                   get_config, list_archs, reduce_config)
+
+__all__ = ["ARCH_MODULES", "SHAPES", "LONG_CTX_ARCHS", "get_config",
+           "list_archs", "reduce_config", "cell_applicable"]

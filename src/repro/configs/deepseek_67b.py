@@ -1,0 +1,10 @@
+"""DeepSeek-67B [arXiv:2401.02954]: llama-arch dense, GQA kv=8."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-67b", family="decoder",
+    n_layers=95, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=22016, vocab_size=102400,
+    rope_theta=1e4,
+    dtype="bf16", policy="fp8_dpa", remat="full", attn_chunk=512, logits_chunk=512,
+)

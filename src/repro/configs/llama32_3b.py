@@ -1,0 +1,10 @@
+"""Llama-3.2-3B [hf:meta-llama/Llama-3.2 family]: small llama3."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.2-3b", family="decoder",
+    n_layers=28, d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+    d_ff=8192, vocab_size=128256,
+    rope_theta=5e5, tie_embeddings=True,
+    dtype="bf16", policy="fp8_dpa", remat="full", attn_chunk=512, logits_chunk=512,
+)

@@ -1,0 +1,10 @@
+"""Qwen2-72B [arXiv:2407.10671]: dense, GQA kv=8, QKV bias."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2-72b", family="decoder",
+    n_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+    d_ff=29568, vocab_size=152064,
+    qkv_bias=True, rope_theta=1e6,
+    dtype="bf16", policy="fp8_dpa", remat="full", attn_chunk=512, logits_chunk=512,
+)

@@ -1,0 +1,10 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-8B family]: qk_norm, GQA kv=8."""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b", family="decoder",
+    n_layers=36, d_model=2560, n_heads=32, n_kv_heads=8, head_dim=128,
+    d_ff=9728, vocab_size=151936,
+    qk_norm=True, rope_theta=1e6, tie_embeddings=True,
+    dtype="bf16", policy="fp8_dpa", remat="full", attn_chunk=512, logits_chunk=512,
+)

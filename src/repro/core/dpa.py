@@ -1,0 +1,275 @@
+"""TransDot golden model: trans-precision dot-product accumulation (DPA).
+
+This is the bit-accurate functional model of the TransDot datapath
+(paper §II): N low-precision products (N=1 scalar/SIMD FMA, N=2 FP16,
+N=4 FP8-E4M3, N=8 FP4-E2M1) are computed *exactly*, aligned into a wide
+windowed accumulator anchored at the maximum operand exponent (the
+reconfigurable barrel shifter + the multi-mode multiplier's reduction
+tree), summed together with a higher-precision addend C, normalized,
+and rounded once (RNE) into the accumulate format (FP32 or FP16,
+Table I).
+
+Datapath correspondence
+-----------------------
+  exact sub-multiplier products     -> integer mantissa products
+  reconfigurable alignment shifter  -> per-term variable shift into the
+                                       window, out-shifted bits -> sticky
+  wide no-precision-loss adder      -> multi-limb integer accumulator of
+                                       width 3*p_acc + 4 + ceil(log2(N+1))
+                                       (the paper's 3p+4 FMA adder widened
+                                       by the DPA term count)
+  LZC + normalization shifter       -> exact bit-length scan + extraction
+  rounding stage (per-lane)         -> single RNE encode
+
+The model is vectorized jnp integer arithmetic (jit/vmap-friendly).
+It requires 64-bit integers; importing this module enables jax x64.
+All other repro modules use explicit dtypes so this is safe.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+
+from .formats import (FP16, FP32, FloatFormat, decode, encode_from_parts,  # noqa: E402
+                      get_format, inf_code, nan_code)
+
+# Number of 32-bit limbs in the wide accumulator (little-endian digits held
+# in int64 so per-limb sums never overflow).
+_LIMBS = 6
+_MASK32 = (1 << 32) - 1
+
+
+def default_window_bits(fmt_acc: FloatFormat, n_terms: int) -> int:
+    """The paper's no-precision-loss adder width generalized to N terms."""
+    return 3 * fmt_acc.precision + 4 + max(1, math.ceil(math.log2(n_terms + 1)))
+
+
+# -----------------------------------------------------------------------------
+# wide-integer helpers (radix 2^32 digits in int64)
+# -----------------------------------------------------------------------------
+
+def _place(limbs, mag, shift, sign):
+    """limbs += (-1)^sign * mag * 2^shift   (shift >= 0, mag < 2^48)."""
+    k = shift >> 5          # limb index
+    rr = shift & 31         # intra-limb offset
+    m_lo = mag & _MASK32
+    m_hi = mag >> 32
+    t0 = m_lo << rr                       # < 2^63
+    t1 = m_hi << rr                       # < 2^47
+    d = [t0 & _MASK32,
+         (t0 >> 32) + (t1 & _MASK32),     # < 2^33
+         t1 >> 32]
+    s = jnp.where(sign == 1, -1, 1).astype(limbs.dtype)
+    pos = jnp.arange(_LIMBS, dtype=k.dtype)
+    for j, dj in enumerate(d):
+        sel = (pos == (k + j)[..., None]).astype(limbs.dtype)
+        limbs = limbs + sel * (s * dj)[..., None]
+    return limbs
+
+
+def _carry_normalize(limbs):
+    """Signed carry propagation -> digits in [0, 2^32), negative flag."""
+    out = []
+    carry = jnp.zeros(limbs.shape[:-1], limbs.dtype)
+    for j in range(_LIMBS):
+        v = limbs[..., j] + carry
+        carry = v >> 32          # arithmetic shift = floor division
+        out.append(v - (carry << 32))
+    # after the top limb, `carry` is 0 (non-negative total) or -1 (negative)
+    neg = carry < 0
+    limbs = jnp.stack(out, axis=-1)
+    # two's-complement negate where negative: invert digits, +1 with carry
+    inv = (~limbs) & _MASK32
+    carry2 = jnp.ones(limbs.shape[:-1], limbs.dtype)
+    neg_digits = []
+    for j in range(_LIMBS):
+        v = inv[..., j] + carry2
+        carry2 = v >> 32
+        neg_digits.append(v & _MASK32)
+    neg_limbs = jnp.stack(neg_digits, axis=-1)
+    return jnp.where(neg[..., None], neg_limbs, limbs), neg
+
+
+def _bitlen32(x):
+    """Bit length of values in [0, 2^32)."""
+    n = jnp.zeros_like(x)
+    for k in (16, 8, 4, 2, 1):
+        m = x >> k
+        take = m != 0
+        n = n + k * take.astype(x.dtype)
+        x = jnp.where(take, m, x)
+    return n + (x != 0).astype(x.dtype)
+
+
+def _msb(limbs):
+    """Index+1 of the highest set bit; -1 if the value is zero."""
+    pos = jnp.arange(_LIMBS, dtype=limbs.dtype)
+    cand = jnp.where(limbs != 0, 32 * pos + _bitlen32(limbs), -1)
+    return jnp.max(cand, axis=-1)
+
+
+def _get_limb(limbs, idx):
+    idx_c = jnp.clip(idx, 0, _LIMBS - 1)
+    v = jnp.take_along_axis(limbs, idx_c[..., None], axis=-1)[..., 0]
+    return jnp.where((idx < 0) | (idx >= _LIMBS), 0, v)
+
+
+def _extract_top(limbs, msb, nbits):
+    """T = floor(value / 2^(msb-nbits)), sticky = dropped bits != 0."""
+    r = msb - nbits
+    # r > 0 path: gather the straddling limbs
+    k = jnp.maximum(r, 0) >> 5
+    rr = jnp.maximum(r, 0) & 31
+    l0 = _get_limb(limbs, k)
+    l1 = _get_limb(limbs, k + 1)
+    mask26 = (1 << (nbits + 1)) - 1
+    t_pos = ((l0 >> rr) | ((l1 & mask26) << (32 - rr))) & ((1 << nbits) - 1)
+    # sticky: limbs fully below k, plus low rr bits of limb k
+    pos = jnp.arange(_LIMBS, dtype=limbs.dtype)
+    below = jnp.any((limbs != 0) & (pos < k[..., None]), axis=-1)
+    sticky_pos = below | ((l0 & ((1 << rr) - 1)) != 0)
+    # r <= 0 path: value < 2^nbits, lives in limb 0 (nbits <= 27)
+    t_neg = (limbs[..., 0] << jnp.minimum(-r, 32)) & ((1 << nbits) - 1)
+    t = jnp.where(r > 0, t_pos, jnp.where(r == 0, t_pos, t_neg))
+    sticky = jnp.where(r > 0, sticky_pos, False)
+    return t, sticky
+
+
+# -----------------------------------------------------------------------------
+# the DPA datapath
+# -----------------------------------------------------------------------------
+
+def dpa_codes(a_codes, b_codes, c_codes, fmt_ab, fmt_acc=FP32,
+              window_bits=None):
+    """N-term trans-precision dot-product accumulation on integer codes.
+
+    a_codes, b_codes: integer codes of shape (..., N) in ``fmt_ab``.
+    c_codes:          integer codes of shape (...,) in ``fmt_acc``.
+    Returns integer codes of shape (...,) in ``fmt_acc``:
+        round_RNE( sum_i a_i * b_i + c )   computed as one windowed sum.
+    """
+    fmt_ab = get_format(fmt_ab)
+    fmt_acc = get_format(fmt_acc)
+    a_codes = jnp.asarray(a_codes)
+    n_terms = a_codes.shape[-1]
+    W = window_bits or default_window_bits(fmt_acc, n_terms)
+    if W + 52 > 32 * _LIMBS:
+        raise ValueError(f"window_bits={W} too wide for {_LIMBS} limbs")
+
+    i64 = jnp.int64
+    sa, ma, ea, za, ia, na = decode(a_codes, fmt_ab)
+    sb, mb, eb, zb, ib, nb = decode(b_codes, fmt_ab)
+    sc, mc, ec, zc, ic, nc = decode(c_codes, fmt_acc)
+
+    # --- exact products ------------------------------------------------------
+    sp = sa ^ sb
+    mp = ma.astype(i64) * mb.astype(i64)            # <= 2^48 (fp32 scalar mode)
+    qp = (ea + eb - 2 * fmt_ab.man_bits).astype(i64)
+    mcw = mc.astype(i64)
+    qc = (ec - fmt_acc.man_bits).astype(i64)
+
+    # --- anchor & window -----------------------------------------------------
+    def blen(m):  # bit length of int64 magnitudes < 2^48
+        hi = _bitlen32(m >> 32)
+        lo = _bitlen32(m & _MASK32)
+        return jnp.where(hi > 0, hi + 32, lo)
+
+    NEG = jnp.asarray(-(1 << 40), i64)
+    tops = jnp.concatenate(
+        [jnp.where(mp != 0, qp + blen(mp), NEG),
+         jnp.where(mcw != 0, qc + blen(mcw), NEG)[..., None]], axis=-1)
+    anchor = jnp.max(tops, axis=-1)
+    lam = anchor - W                                 # weight of window bit 0
+
+    # --- align + accumulate (shifter + wide adder) ---------------------------
+    # Window layout: bits [2, W+2) hold in-window data (weight 2^(lam+b-2));
+    # bit 0 receives a SIGNED +-1 residue unit whenever a term loses bits
+    # below the window — the end-around-borrow behaviour of a hardware
+    # aligner, so a negative sub-window addend correctly breaks RNE ties
+    # downward instead of acting as an unsigned sticky.
+    limbs = jnp.zeros(a_codes.shape[:-1] + (_LIMBS,), i64)
+    any_resid = jnp.zeros(a_codes.shape[:-1], bool)
+
+    def add_term(limbs, any_resid, m, q, s):
+        sh = q - lam + 2
+        rs = jnp.clip(-sh, 0, 63)
+        lost = (m & ((jnp.asarray(1, i64) << rs) - 1)) != 0
+        m = m >> rs
+        sh = jnp.clip(sh, 0, 32 * _LIMBS - 49)
+        limbs = _place(limbs, m, sh, s)
+        limbs = _place(limbs, lost.astype(i64), jnp.zeros_like(sh), s)
+        return limbs, any_resid | lost
+
+    for i in range(n_terms):
+        limbs, any_resid = add_term(limbs, any_resid,
+                                    mp[..., i], qp[..., i], sp[..., i])
+    limbs, any_resid = add_term(limbs, any_resid, mcw, qc, sc)
+    sticky_in = jnp.zeros(a_codes.shape[:-1], bool)
+
+    # --- normalize + round ---------------------------------------------------
+    limbs, neg = _carry_normalize(limbs)
+    msb = _msb(limbs)
+    is_zero = msb < 0
+    nbits = fmt_acc.man_bits + 3                     # 1.man | G | R
+    msb_c = jnp.maximum(msb, 1)
+    t, sticky_lo = _extract_top(limbs, msb_c, nbits)
+    sticky = sticky_in | sticky_lo
+    e_lead = (lam - 2) + msb_c - 1                   # window floor at lam-2
+    sign_out = neg.astype(t.dtype)
+    code = encode_from_parts(sign_out, t, e_lead.astype(t.dtype), sticky,
+                             fmt_acc)
+
+    # value exactly zero inside the window: sign = AND of all input signs
+    # (IEEE-754 sum-of-zeros rule applied across the flattened sum); when
+    # mixed-sign sub-window residues cancelled, the true value is an
+    # unknowably-signed tiny -> +0 (documented 1-window-ulp contract).
+    all_neg = jnp.all(sp == 1, axis=-1) & (sc == 1)
+    zero_code = (all_neg & ~any_resid).astype(t.dtype) << (fmt_acc.bits - 1)
+    code = jnp.where(is_zero, zero_code, code)
+
+    # --- special values ------------------------------------------------------
+    prod_nan = na | nb | (ia & zb) | (ib & za)
+    prod_inf = (ia | ib) & ~prod_nan
+    pos_inf = jnp.any(prod_inf & (sp == 0), axis=-1) | (ic & (sc == 0))
+    neg_inf = jnp.any(prod_inf & (sp == 1), axis=-1) | (ic & (sc == 1))
+    any_nan = jnp.any(prod_nan, axis=-1) | nc | (pos_inf & neg_inf)
+    any_inf = (pos_inf | neg_inf) & ~any_nan
+
+    if fmt_acc.has_inf:
+        code = jnp.where(any_inf,
+                         inf_code(fmt_acc, neg_inf.astype(t.dtype)), code)
+        code = jnp.where(any_nan, nan_code(fmt_acc), code)
+    else:
+        code = jnp.where(any_nan | any_inf, nan_code(fmt_acc), code)
+    return code.astype(jnp.uint32)
+
+
+@partial(jax.jit, static_argnames=("fmt_ab", "fmt_acc", "window_bits"))
+def dpa_codes_jit(a_codes, b_codes, c_codes, fmt_ab="fp16", fmt_acc="fp32",
+                  window_bits=None):
+    return dpa_codes(a_codes, b_codes, c_codes, fmt_ab, fmt_acc, window_bits)
+
+
+# -----------------------------------------------------------------------------
+# convenience float front-ends (test / benchmark plumbing)
+# -----------------------------------------------------------------------------
+
+def dpa(a, b, c, fmt_ab, fmt_acc=FP32, window_bits=None):
+    """DPA on float inputs: quantizes a/b into fmt_ab codes (RNE via
+    ml_dtypes), c into fmt_acc, runs the datapath, returns float output."""
+    import numpy as np
+
+    from .formats import codes_to_np, float_to_codes
+    fmt_ab = get_format(fmt_ab)
+    fmt_acc = get_format(fmt_acc)
+    ac = float_to_codes(np.asarray(a), fmt_ab)
+    bc = float_to_codes(np.asarray(b), fmt_ab)
+    cc = float_to_codes(np.asarray(c), fmt_acc)
+    out = dpa_codes(ac, bc, cc, fmt_ab, fmt_acc, window_bits)
+    return codes_to_np(np.asarray(out), fmt_acc).astype(np.float64)

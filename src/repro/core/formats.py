@@ -1,0 +1,264 @@
+"""Floating-point format descriptors and bit-level decode/encode.
+
+These are the formats of TransDot Table I (plus BF16 / FP8-E5M2 which the
+quantization policy layer also offers):
+
+    FP32  E8M23   IEEE-754 binary32
+    FP16  E5M10   IEEE-754 binary16
+    BF16  E8M7    bfloat16
+    FP8   E4M3    OCP FP8 E4M3 ("fn": no infinities, NaN = S.1111.111)
+    FP8   E5M2    OCP FP8 E5M2 (IEEE-like specials)
+    FP4   E2M1    OCP FP4 E2M1 (no infinities, no NaN)
+
+Decode produces a uniform unpacked representation used by the DPA golden
+model (`repro.core.dpa`):
+
+    value = (-1)^sign * mant * 2^(exp - man_bits)
+
+where ``mant`` carries the implicit bit for normals (``mant ∈ [2^m, 2^{m+1})``)
+and the raw fraction for subnormals (``exp`` pinned at ``1 - bias``).  All
+arithmetic is plain jnp integer ops so the decoder runs under jit/vmap and
+inside Pallas interpret mode.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import ml_dtypes
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class FloatFormat:
+    name: str
+    exp_bits: int
+    man_bits: int
+    has_inf: bool = True
+    # "ieee": exp==all-ones encodes inf (mant==0) / NaN (mant!=0)
+    # "fn":   no inf; only exp==all-ones & mant==all-ones is NaN (OCP E4M3)
+    # "none": every code is finite (OCP E2M1)
+    special: str = "ieee"
+    ml_dtype: Optional[np.dtype] = None
+
+    # ---- derived quantities -------------------------------------------------
+    @property
+    def bits(self) -> int:
+        return 1 + self.exp_bits + self.man_bits
+
+    @property
+    def bias(self) -> int:
+        return (1 << (self.exp_bits - 1)) - 1
+
+    @property
+    def precision(self) -> int:
+        """p = man_bits + 1 (the paper's ``p``)."""
+        return self.man_bits + 1
+
+    @property
+    def emin(self) -> int:
+        return 1 - self.bias
+
+    @property
+    def emax(self) -> int:
+        if self.special == "ieee":
+            return (1 << self.exp_bits) - 2 - self.bias
+        # fn / none formats use the top exponent for finite values
+        return (1 << self.exp_bits) - 1 - self.bias
+
+    @property
+    def max_finite(self) -> float:
+        if self.special == "ieee":
+            frac = 2.0 - 2.0 ** (-self.man_bits)
+        elif self.special == "fn":
+            # all-ones exponent, mantissa all-ones reserved for NaN
+            frac = 2.0 - 2.0 ** (-self.man_bits) * 2.0
+        else:  # none
+            frac = 2.0 - 2.0 ** (-self.man_bits)
+        return frac * 2.0 ** self.emax
+
+    @property
+    def min_subnormal(self) -> float:
+        return 2.0 ** (self.emin - self.man_bits)
+
+    @property
+    def quant_target(self) -> float:
+        """absmax target for quantization scaling.  Capped at 2^14 so that
+        wide-range formats (bf16/fp16) don't scale operands into a range
+        where fp32-accumulated dot products overflow — narrow formats use
+        their full range (fp8 448, fp4 6), matching deployment practice."""
+        return min(self.max_finite, 2.0 ** 14)
+
+    # masks
+    @property
+    def exp_mask(self) -> int:
+        return (1 << self.exp_bits) - 1
+
+    @property
+    def man_mask(self) -> int:
+        return (1 << self.man_bits) - 1
+
+    def code_dtype(self):
+        return jnp.uint32 if self.bits > 16 else (jnp.uint16 if self.bits > 8 else jnp.uint8)
+
+
+FP32 = FloatFormat("fp32", 8, 23, ml_dtype=np.dtype(np.float32))
+FP16 = FloatFormat("fp16", 5, 10, ml_dtype=np.dtype(np.float16))
+BF16 = FloatFormat("bf16", 8, 7, ml_dtype=np.dtype(ml_dtypes.bfloat16))
+FP8_E4M3 = FloatFormat("fp8_e4m3", 4, 3, has_inf=False, special="fn",
+                       ml_dtype=np.dtype(ml_dtypes.float8_e4m3fn))
+FP8_E5M2 = FloatFormat("fp8_e5m2", 5, 2, ml_dtype=np.dtype(ml_dtypes.float8_e5m2))
+FP4_E2M1 = FloatFormat("fp4_e2m1", 2, 1, has_inf=False, special="none",
+                       ml_dtype=np.dtype(ml_dtypes.float4_e2m1fn))
+
+FORMATS = {f.name: f for f in (FP32, FP16, BF16, FP8_E4M3, FP8_E5M2, FP4_E2M1)}
+# Aliases used by configs / CLI flags.
+FORMATS.update({"fp8": FP8_E4M3, "fp4": FP4_E2M1})
+
+
+def get_format(name) -> FloatFormat:
+    if isinstance(name, FloatFormat):
+        return name
+    return FORMATS[name]
+
+
+# -----------------------------------------------------------------------------
+# Decode: code -> (sign, mant, exp, is_zero, is_inf, is_nan)
+# -----------------------------------------------------------------------------
+
+def decode(codes, fmt: FloatFormat):
+    """Unpack integer codes into sign/significand/exponent fields.
+
+    Returns int32 arrays (int64-safe under x64): ``sign`` in {0,1}, ``mant``
+    the integer significand including the implicit bit for normals, ``exp``
+    the unbiased exponent such that value = (-1)^s * mant * 2^(exp-man_bits),
+    and boolean special flags.
+    """
+    c = jnp.asarray(codes).astype(jnp.int32)
+    sign = (c >> (fmt.exp_bits + fmt.man_bits)) & 1
+    e_raw = (c >> fmt.man_bits) & fmt.exp_mask
+    frac = c & fmt.man_mask
+
+    is_sub = e_raw == 0
+    mant = jnp.where(is_sub, frac, frac | (1 << fmt.man_bits))
+    exp = jnp.where(is_sub, fmt.emin, e_raw - fmt.bias)
+
+    is_zero = (e_raw == 0) & (frac == 0)
+    mant = jnp.where(is_zero, 0, mant)
+
+    if fmt.special == "ieee":
+        top = e_raw == fmt.exp_mask
+        is_inf = top & (frac == 0)
+        is_nan = top & (frac != 0)
+        mant = jnp.where(top, 0, mant)
+    elif fmt.special == "fn":
+        is_nan = (e_raw == fmt.exp_mask) & (frac == fmt.man_mask)
+        is_inf = jnp.zeros_like(is_nan)
+        mant = jnp.where(is_nan, 0, mant)
+    else:  # none
+        is_inf = jnp.zeros(c.shape, bool)
+        is_nan = jnp.zeros(c.shape, bool)
+    return sign, mant, exp, is_zero, is_inf, is_nan
+
+
+# -----------------------------------------------------------------------------
+# Encode: (sign, mant, exp) -> code, with RNE rounding + subnormal/overflow
+# -----------------------------------------------------------------------------
+
+def encode_from_parts(sign, mant, exp, sticky, fmt: FloatFormat):
+    """Round-to-nearest-even encode of value = (-1)^s * mant * 2^(exp-man_bits).
+
+    ``mant`` must already be normalized so that the implicit bit sits at
+    position ``man_bits + 2``: i.e. mant has exactly man_bits+3 significant
+    bits (mantissa | guard | round) for a normal result, with any lower bits
+    ORed into the boolean ``sticky``.  This is the post-normalization shape
+    the DPA datapath hands to its rounding stage.  Handles subnormal
+    underflow, overflow (-> inf or max-finite for non-inf formats), and zero.
+    """
+    m = fmt.man_bits
+    # Current layout: [ 1 . m man bits | G | R ], value = mant * 2^(exp - m - 2)
+    # Subnormal: shift right until exp == emin.
+    shift = jnp.maximum(0, fmt.emin - exp)
+    shift_c = jnp.minimum(shift, m + 4)
+    lost = mant & ((1 << shift_c) - 1)
+    sticky = sticky | (lost != 0)
+    mant = mant >> shift_c
+    exp = exp + shift
+
+    # RNE on [man | G | R+sticky]
+    guard = (mant >> 1) & 1
+    rnd = mant & 1
+    keep = mant >> 2
+    round_up = guard & (rnd | sticky.astype(mant.dtype) | (keep & 1))
+    keep = keep + round_up
+    # rounding overflow: mantissa carried out
+    carried = keep >> (m + 1) != 0
+    keep = jnp.where(carried, keep >> 1, keep)
+    exp = jnp.where(carried, exp + 1, exp)
+
+    is_zero = keep == 0
+    # Biased exponent: normals get e_raw = exp + bias; subnormal results have
+    # no implicit bit at position m -> e_raw 0.
+    is_sub = keep < (1 << m)
+    e_raw = jnp.where(is_sub | is_zero, 0, exp + fmt.bias)
+    frac = keep & fmt.man_mask
+
+    overflow = exp > fmt.emax
+    code = (sign << (fmt.exp_bits + fmt.man_bits)) | (e_raw << m) | frac
+
+    if fmt.has_inf:
+        inf_code = (sign << (fmt.exp_bits + fmt.man_bits)) | (fmt.exp_mask << m)
+        code = jnp.where(overflow, inf_code, code)
+    else:
+        # saturating encode for inf-less formats
+        if fmt.special == "fn":
+            max_code = (fmt.exp_mask << m) | (fmt.man_mask - 1)
+        else:
+            max_code = (fmt.exp_mask << m) | fmt.man_mask
+        code = jnp.where(overflow,
+                         (sign << (fmt.exp_bits + fmt.man_bits)) | max_code, code)
+    code = jnp.where(is_zero, sign << (fmt.exp_bits + fmt.man_bits), code)
+    return code
+
+
+def nan_code(fmt: FloatFormat):
+    m = fmt.man_bits
+    if fmt.special == "ieee":
+        return (fmt.exp_mask << m) | (1 << (m - 1) if m else 0) | (1 if m == 0 else 0)
+    if fmt.special == "fn":
+        return (fmt.exp_mask << m) | fmt.man_mask
+    raise ValueError(f"{fmt.name} has no NaN encoding")
+
+
+def inf_code(fmt: FloatFormat, sign):
+    if not fmt.has_inf:
+        raise ValueError(f"{fmt.name} has no inf encoding")
+    return (sign << (fmt.exp_bits + fmt.man_bits)) | (fmt.exp_mask << fmt.man_bits)
+
+
+# -----------------------------------------------------------------------------
+# numpy <-> code helpers (test plumbing)
+# -----------------------------------------------------------------------------
+
+def np_to_codes(x, fmt: FloatFormat) -> np.ndarray:
+    """Bit-cast a numpy array in fmt.ml_dtype to integer codes."""
+    x = np.asarray(x, fmt.ml_dtype)
+    u = x.view({1: np.uint8, 2: np.uint16, 4: np.uint32}[x.dtype.itemsize])
+    return u.astype(np.uint32)
+
+
+def codes_to_np(codes, fmt: FloatFormat) -> np.ndarray:
+    codes = np.asarray(codes)
+    if fmt.bits > 16:
+        return codes.astype(np.uint32).view(np.float32)
+    if fmt.bits > 8:
+        return codes.astype(np.uint16).view(fmt.ml_dtype)
+    # fp8 / fp4 families: ml_dtypes store one value per byte (fp4 uses the
+    # low nibble of a byte container)
+    return codes.astype(np.uint8).view(fmt.ml_dtype)
+
+
+def float_to_codes(x, fmt: FloatFormat) -> np.ndarray:
+    """Cast float64/float32 numpy data into fmt (RNE, numpy/ml_dtypes) codes."""
+    return np_to_codes(np.asarray(x).astype(fmt.ml_dtype), fmt)

@@ -1,0 +1,115 @@
+"""DPALinear — every matmul in the framework goes through here.
+
+Forward contract (the paper's Table I):  y = sum_k q(x)_k * q(w)_k + c
+with products in the operand format and accumulation in fp32 (or fp16).
+Three execution paths, selected by the policy:
+
+  fp32        : plain dot (DPA disabled / baseline).
+  fake-quant  : STE quant-dequant of both operands + fp32-accumulated dot.
+                This is the *training* path — numerics match the hardware
+                contract (operands carry format precision, accumulation is
+                wide) while gradients flow.
+  kernel      : Pallas `dpa_matmul` on pre-quantized operands (serving /
+                TPU path; interpret-mode on CPU).
+
+Parameters are plain pytrees ({"w": ..., "b": ...}); the module system in
+`repro.models` composes these functions.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .policy import TransPrecisionPolicy, get_policy
+from .quantize import fake_quant
+
+
+def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
+                dtype=jnp.float32, scale: Optional[float] = None):
+    wkey, _ = jax.random.split(key)
+    s = scale if scale is not None else d_in ** -0.5
+    params = {"w": (jax.random.normal(wkey, (d_in, d_out), jnp.float32) * s
+                    ).astype(dtype)}
+    if bias:
+        params["b"] = jnp.zeros((d_out,), dtype)
+    return params
+
+
+_NATIVE_NARROW = ("float8_e4m3fn", "float8_e5m2", "float4_e2m1fn")
+
+
+def dpa_dot(x, w, policy: TransPrecisionPolicy):
+    """The DPA execution contract for x @ w (contraction on last/first)."""
+    policy = get_policy(policy)
+    acc_t = jnp.float32 if policy.accum == "fp32" else jnp.float16
+    if str(w.dtype) in _NATIVE_NARROW:
+        # pre-quantized weights (serving): keep them NATIVE in the dot —
+        # fp8 x fp8 -> fp32 is the MXU DPA path itself, and it leaves no
+        # whole-stack weight convert for XLA to hoist out of the layer
+        # scan (measured 13.7 GiB on dbrx decode; EXPERIMENTS.md §Perf).
+        from .quantize import cast_to, compute_scale
+        sx = compute_scale(x, policy.fmt_acts, axis=-1)
+        xq = cast_to(x.astype(jnp.float32) / sx, policy.fmt_acts)
+        out = jnp.dot(xq, w, preferred_element_type=jnp.float32)
+        return out * sx
+    if not policy.enabled:
+        return jnp.dot(x, w, preferred_element_type=acc_t)
+    if policy.use_kernel:
+        from repro.kernels import ops as kops
+        return kops.dpa_matmul(x, w, policy)
+    # fake-quant path: operands at format precision, wide accumulation
+    wq = fake_quant(
+        w, policy.fmt_weights,
+        axis=0 if policy.w_granularity == "per_channel" else None,
+        block=policy.block_size if policy.w_granularity == "per_block" else None)
+    xq = fake_quant(
+        x, policy.fmt_acts,
+        axis=-1 if policy.a_granularity == "per_channel" else None,
+        block=policy.block_size if policy.a_granularity == "per_block" else None)
+    return jnp.dot(xq, wq, preferred_element_type=acc_t)
+
+
+def apply_linear(params, x, policy: TransPrecisionPolicy = None):
+    policy = get_policy(policy or "fp32")
+    w = params["w"]
+    if str(w.dtype) not in _NATIVE_NARROW:
+        w = w.astype(x.dtype)
+    y = dpa_dot(x, w, policy)
+    if "b" in params:
+        y = y + params["b"].astype(y.dtype)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# grouped (expert) linear for MoE: contraction per expert
+# ---------------------------------------------------------------------------
+
+def init_grouped_linear(key, n_groups: int, d_in: int, d_out: int, *,
+                        dtype=jnp.float32):
+    s = d_in ** -0.5
+    w = jax.random.normal(key, (n_groups, d_in, d_out), jnp.float32) * s
+    return {"w": w.astype(dtype)}
+
+
+def apply_grouped_linear(params, x, policy: TransPrecisionPolicy = None):
+    """x: (n_groups, tokens, d_in) -> (n_groups, tokens, d_out)."""
+    policy = get_policy(policy or "fp32")
+    w = params["w"]
+    acc_t = jnp.float32 if policy.accum == "fp32" else jnp.float16
+    if str(w.dtype) in _NATIVE_NARROW:
+        from .quantize import cast_to, compute_scale
+        sx = compute_scale(x, policy.fmt_acts, axis=-1)
+        xq = cast_to(x.astype(jnp.float32) / sx, policy.fmt_acts)
+        y = jnp.einsum("gti,gio->gto", xq, w,
+                       preferred_element_type=jnp.float32) * sx
+        return y.astype(x.dtype)
+    w = w.astype(x.dtype)
+    if policy.enabled:
+        w = fake_quant(w, policy.fmt_weights,
+                       axis=1 if policy.w_granularity == "per_channel" else None)
+        x = fake_quant(x, policy.fmt_acts)
+    y = jnp.einsum("gti,gio->gto", x, w,
+                   preferred_element_type=acc_t)
+    return y.astype(x.dtype)

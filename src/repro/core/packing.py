@@ -1,0 +1,57 @@
+"""Bit packing for sub-byte formats.
+
+TransDot's I/O contract packs operands at format width: FP8 one code per
+byte, FP4 two codes per byte (the FP4 DP2 stage consumes 8 operand pairs
+= 4 packed bytes per side).  These helpers implement that packing for
+storage/transport (checkpoint shards, compressed collectives, kernel
+operand layout); they are pure jnp and usable inside Pallas interpret.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .formats import FP4_E2M1, FloatFormat, get_format
+
+
+def pack_fp4(codes):
+    """uint8 codes in [0,16) with even last dim -> packed uint8 (low nibble
+    = even index, high nibble = odd index)."""
+    c = jnp.asarray(codes).astype(jnp.uint8)
+    if c.shape[-1] % 2:
+        raise ValueError("fp4 packing needs an even trailing dimension")
+    lo = c[..., 0::2] & 0xF
+    hi = c[..., 1::2] & 0xF
+    return lo | (hi << 4)
+
+
+def unpack_fp4(packed):
+    p = jnp.asarray(packed).astype(jnp.uint8)
+    lo = p & 0xF
+    hi = p >> 4
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(p.shape[:-1] + (p.shape[-1] * 2,))
+
+
+def packed_nbytes(n_elems: int, fmt: FloatFormat) -> int:
+    fmt = get_format(fmt)
+    if fmt is FP4_E2M1 or fmt.bits == 4:
+        return (n_elems + 1) // 2
+    return n_elems * ((fmt.bits + 7) // 8)
+
+
+def pack_codes(codes, fmt: FloatFormat):
+    fmt = get_format(fmt)
+    if fmt.bits == 4:
+        return pack_fp4(codes)
+    if fmt.bits == 8:
+        return jnp.asarray(codes).astype(jnp.uint8)
+    if fmt.bits == 16:
+        return jnp.asarray(codes).astype(jnp.uint16)
+    return jnp.asarray(codes).astype(jnp.uint32)
+
+
+def unpack_codes(packed, fmt: FloatFormat):
+    fmt = get_format(fmt)
+    if fmt.bits == 4:
+        return unpack_fp4(packed)
+    return jnp.asarray(packed)

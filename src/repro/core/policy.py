@@ -1,0 +1,74 @@
+"""Trans-precision execution policy — the software mode register.
+
+The hardware selects an execution mode (Table I) through configuration
+signals; the framework selects it through a `TransPrecisionPolicy` carried
+by every DPA-shaped op.  A policy names the operand format for weights and
+activations, the accumulate format, and the scale granularity.  `dpa_terms`
+is the paper's N (how many products the FPU folds per issue) — it drives
+the throughput model and the kernel K-packing.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .formats import get_format
+
+# Table I: format -> DPA terms folded into one FP32 accumulation
+DPA_TERMS = {"fp32": 1, "bf16": 2, "fp16": 2, "fp8_e4m3": 4, "fp8_e5m2": 4,
+             "fp4_e2m1": 8}
+
+
+@dataclasses.dataclass(frozen=True)
+class TransPrecisionPolicy:
+    """Per-op trans-precision configuration.
+
+    fmt_weights / fmt_acts: operand formats fed to the multiplier array.
+    accum: the accumulate format (Table I column "Accumulate Format").
+    granularities: "per_tensor" | "per_channel" | "per_block".
+    use_kernel: route through the Pallas dpa_matmul kernel when shapes
+    allow (TPU target; interpret-mode on CPU).
+    """
+    fmt_weights: str = "fp32"
+    fmt_acts: str = "fp32"
+    accum: str = "fp32"
+    w_granularity: str = "per_channel"
+    a_granularity: str = "per_tensor"
+    block_size: int = 128
+    use_kernel: bool = False
+
+    def __post_init__(self):
+        get_format(self.fmt_weights), get_format(self.fmt_acts)
+        if get_format(self.accum).name not in ("fp32", "fp16"):
+            raise ValueError("TransDot accumulates into FP32 or FP16")
+
+    @property
+    def enabled(self) -> bool:
+        return not (self.fmt_weights == "fp32" and self.fmt_acts == "fp32")
+
+    @property
+    def dpa_terms(self) -> int:
+        """N = products per accumulation issue (min across operand sides)."""
+        return min(DPA_TERMS[get_format(self.fmt_weights).name],
+                   DPA_TERMS[get_format(self.fmt_acts).name])
+
+    def replace(self, **kw) -> "TransPrecisionPolicy":
+        return dataclasses.replace(self, **kw)
+
+
+# Presets: the paper's four headline modes + bf16 (TPU-native comparison)
+POLICIES = {
+    "fp32": TransPrecisionPolicy(),
+    "bf16_dpa": TransPrecisionPolicy("bf16", "bf16"),
+    "fp16_dpa": TransPrecisionPolicy("fp16", "fp16"),
+    "fp8_dpa": TransPrecisionPolicy("fp8_e4m3", "fp8_e4m3"),
+    "fp4_dpa": TransPrecisionPolicy("fp4_e2m1", "fp8_e4m3"),
+    # weight-only variants (serving: weights ride the narrow wires)
+    "w8a16": TransPrecisionPolicy("fp8_e4m3", "fp16"),
+    "w4a8": TransPrecisionPolicy("fp4_e2m1", "fp8_e4m3"),
+}
+
+
+def get_policy(name) -> TransPrecisionPolicy:
+    if isinstance(name, TransPrecisionPolicy):
+        return name
+    return POLICIES[name]

@@ -1,0 +1,111 @@
+"""Quantization policies feeding the DPA datapath.
+
+The hardware multiplies raw low-precision operands; software decides how
+tensors are scaled into those formats.  We implement the standard
+deployment recipe: absmax scaling at per-tensor / per-channel / per-block
+granularity, saturating RNE cast into the target format (native XLA
+convert for fp16/bf16/fp8/fp4 via ml_dtypes), and straight-through
+estimation for training.
+
+All casts preserve the DPA contract: the *product/accumulate* dtype is
+always the policy's accumulate format (fp32 by default) — low precision
+only ever touches the multiplier inputs, exactly as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .formats import FloatFormat, get_format
+
+# FloatFormat -> native jnp storage dtype
+_JNP_DTYPE = {
+    "fp32": jnp.float32,
+    "fp16": jnp.float16,
+    "bf16": jnp.bfloat16,
+    "fp8_e4m3": jnp.float8_e4m3fn,
+    "fp8_e5m2": jnp.float8_e5m2,
+    "fp4_e2m1": jnp.float4_e2m1fn,
+}
+
+
+def jnp_dtype(fmt) -> jnp.dtype:
+    return _JNP_DTYPE[get_format(fmt).name]
+
+
+def compute_scale(x, fmt, *, axis=None, keepdims=True, eps=1e-30):
+    """absmax / max_finite scale so that x/scale fits fmt's range.
+
+    Clamped to the fp32 normal range so wide-range target formats (bf16,
+    whose max_finite ~ 3.4e38) cannot underflow the scale to zero."""
+    fmt = get_format(fmt)
+    amax = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    scale = jnp.maximum(amax, eps).astype(jnp.float32) / fmt.quant_target
+    return jnp.maximum(scale, jnp.float32(2.0) ** -126)
+
+
+def cast_to(x, fmt):
+    """Saturating RNE cast into fmt's native dtype (no scaling)."""
+    fmt = get_format(fmt)
+    xf = x.astype(jnp.float32)
+    xf = jnp.clip(xf, -fmt.max_finite, fmt.max_finite)
+    return xf.astype(jnp_dtype(fmt))
+
+
+def quantize(x, fmt, *, axis=None):
+    """-> (q: fmt dtype, scale: f32 broadcastable). axis=None: per-tensor;
+    int/tuple: reduce over that axis (per-channel over the others)."""
+    fmt = get_format(fmt)
+    scale = compute_scale(x, fmt, axis=axis)
+    q = cast_to(x.astype(jnp.float32) / scale, fmt)
+    return q, scale
+
+
+def quantize_blockwise(x, fmt, *, axis, block):
+    """Per-block scales along `axis` (block must divide the dim).  Returns
+    (q, scale) with scale shaped like x but with `axis` reduced per block
+    and kept broadcastable after `dequantize_blockwise`."""
+    fmt = get_format(fmt)
+    axis = axis % x.ndim
+    d = x.shape[axis]
+    if d % block:
+        raise ValueError(f"block {block} does not divide dim {d}")
+    shp = x.shape[:axis] + (d // block, block) + x.shape[axis + 1:]
+    xb = x.reshape(shp)
+    scale = compute_scale(xb, fmt, axis=axis + 1)
+    q = cast_to(xb.astype(jnp.float32) / scale, fmt)
+    return q.reshape(x.shape), scale  # scale: (..., d//block, 1, ...)
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def dequantize_blockwise(q, scale, *, axis, block):
+    axis = axis % q.ndim
+    d = q.shape[axis]
+    shp = q.shape[:axis] + (d // block, block) + q.shape[axis + 1:]
+    return (q.reshape(shp).astype(jnp.float32) * scale).reshape(q.shape)
+
+
+def quant_dequant(x, fmt, *, axis=None, block=None):
+    fmt = get_format(fmt)
+    if fmt.name == "fp32":
+        return x
+    if block is not None and axis is not None:
+        q, s = quantize_blockwise(x, fmt, axis=axis, block=block)
+        return dequantize_blockwise(q, s, axis=axis, block=block).astype(x.dtype)
+    q, s = quantize(x, fmt, axis=axis)
+    return dequantize(q, s).astype(x.dtype)
+
+
+def fake_quant(x, fmt, *, axis=None, block=None):
+    """Straight-through-estimated quantization: forward = quant-dequant,
+    backward = identity.  This is how DPA formats enter the training graph
+    (weights/activations are *represented* low precision; gradients flow in
+    the accumulate format — the paper's stability contract)."""
+    fmt = get_format(fmt)
+    if fmt.name == "fp32":
+        return x
+    qdq = quant_dequant(x, fmt, axis=axis, block=block)
+    return x + jax.lax.stop_gradient(qdq - x)

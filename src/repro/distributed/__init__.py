@@ -1,0 +1,1 @@
+from . import collectives, sharding, step  # noqa: F401

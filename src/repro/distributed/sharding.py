@@ -1,0 +1,215 @@
+"""Sharding rules: parameter/activation PartitionSpecs per model family.
+
+Scheme (DESIGN.md §6): DP over ("pod","data"), TP over "model".
+Parameters are FSDP-sharded: the TP-parallel dim lives on "model", the
+other matrix dim on the DP axes (XLA all-gathers params at use and
+reduce-scatters gradients — ZeRO-ish).  Column-parallel projections
+(q/k/v/gate/up) put d_out on "model"; row-parallel (wo/wd) put d_in on
+"model" so intermediate activations stay model-sharded Megatron-style.
+Expert weights put E on "model" (EP).  Embeddings shard vocab on "model".
+KV caches shard sequence on "model" (decode TP: softmax reduces across
+the axis).  Every rule is divisibility-guarded: a dim that doesn't divide
+its axis group falls back to replication (e.g. batch=1 long-context).
+
+Scan-stacked leaves are recognized by the "groups" path component and get
+their leading group axis replicated.
+"""
+from __future__ import annotations
+
+import contextvars
+import math
+from typing import Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Mesh plan: "tp" = TP+sequence-parallel on "model"; "fully_dp" = the
+# "model" axis joins the DP group (small models / pure-DP training).
+_PLAN = contextvars.ContextVar("repro_mesh_plan", default="tp")
+
+
+def set_mesh_plan(plan: str):
+    _PLAN.set(plan)
+
+
+def get_mesh_plan() -> str:
+    return _PLAN.get()
+
+
+def data_axes(mesh: Mesh):
+    """The DP axis group: ("pod","data") (+"model" under fully_dp)."""
+    names = ("pod", "data", "model") if _PLAN.get() == "fully_dp" \
+        else ("pod", "data")
+    axes = tuple(a for a in mesh.axis_names if a in names)
+    if not axes:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def model_axis():
+    return None if _PLAN.get() == "fully_dp" else "model"
+
+
+def _ambient_mesh():
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m
+
+
+def maybe_shard(x, *spec):
+    """Guarded with_sharding_constraint for model-internal activations.
+
+    spec elements: "data" (resolved to the DP axis group), "model", or
+    None.  No-op when no mesh is ambient (single-device tests/examples),
+    when the named axis is missing, or when the dim doesn't divide the
+    axis size — so model code can pin its parallel layout unconditionally
+    (MaxText-style) and still run anywhere.
+    """
+    mesh = _ambient_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    fixed = []
+    for dim, ax in zip(x.shape, spec):
+        if ax == "data":
+            ax = data_axes(mesh)
+        elif ax == "model":
+            ax = model_axis()
+        if ax is not None and (
+                (isinstance(ax, tuple) and not set(ax) <= names)
+                or (not isinstance(ax, tuple) and ax not in names)):
+            ax = None
+        if ax is not None and dim % _axis_size(mesh, ax):
+            if isinstance(ax, tuple):      # longest dividing prefix
+                pick = None
+                for k in range(len(ax) - 1, 0, -1):
+                    if dim % _axis_size(mesh, ax[:k]) == 0:
+                        pick = ax[:k] if k > 1 else ax[0]
+                        break
+                ax = pick
+            else:
+                ax = None
+        fixed.append(ax)
+    fixed += [None] * (x.ndim - len(fixed))
+    return jax.lax.with_sharding_constraint(x, P(*fixed))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def _guard(spec, shape, mesh: Mesh):
+    """Shard each dim by the longest prefix of its axis group that
+    divides it (a 256-batch on a 512-way group shards over the first
+    32-way subgroup instead of replicating — the difference between a
+    working multi-pod plan and a 1.2 TB/device program)."""
+    out = []
+    for dim, ax in zip(shape, spec):
+        if ax is None or dim % _axis_size(mesh, ax) == 0:
+            out.append(ax)
+            continue
+        if isinstance(ax, tuple):
+            pick = None
+            for k in range(len(ax) - 1, 0, -1):
+                if dim % _axis_size(mesh, ax[:k]) == 0:
+                    pick = ax[:k] if k > 1 else ax[0]
+                    break
+            out.append(pick)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return tuple(out)
+
+
+ROW_PARALLEL = ("wo", "wd")      # contract-dim on "model"
+
+
+def param_spec(path, leaf, mesh: Mesh, mode: str = "fsdp") -> P:
+    """mode "fsdp": FSDP dim on the DP axes; "tp_only": params replicated
+    across DP (serving — no per-step weight gathers)."""
+    names = _path_names(path)
+    joined = "/".join(names)
+    da = data_axes(mesh) if mode == "fsdp" else None
+    ma = model_axis()
+    nd = leaf.ndim
+    lead = 1 if "groups" in names else 0
+    core = nd - lead
+
+    def pad(spec):
+        return _guard([None] * lead + spec, leaf.shape, mesh)
+
+    if "embed" in joined or "unembed" in joined:        # (V, d)
+        # NOTE (§Perf A5, refuted): forcing vocab onto "model" under
+        # fully_dp conflicts with batch axes and triggers SPMD full
+        # rematerialization (+5.7 GiB).  Keep the plan-consistent rule.
+        return pad([ma, da if mode == "fsdp" else None])
+    if "pos_dec" in joined:                              # (S_max, d)
+        return pad([da, None])
+    if core <= 1 or "norm" in joined or (
+            names and names[-1] in ("b", "scale", "bias", "lam", "r")):
+        return P(*([None] * nd))
+    if names and names[-1] == "conv":                    # (cw, dr)
+        return pad([None, ma])
+    if core == 3:                                        # experts (E, di, do)
+        return pad([ma, da, None])
+    row = any(r in names for r in ROW_PARALLEL)
+    if row:                                              # (d_in, d_out)
+        return pad([ma, da])
+    return pad([da, ma])
+
+
+def make_param_shardings(params_shape, mesh: Mesh, mode: str = "fsdp"):
+    """Pytree of NamedShardings matching a params (shape-)pytree."""
+    def spec_of(path, leaf):
+        return NamedSharding(mesh, param_spec(path, leaf, mesh, mode))
+    return jax.tree_util.tree_map_with_path(spec_of, params_shape)
+
+
+# -----------------------------------------------------------------------------
+# activation / batch / cache specs
+# -----------------------------------------------------------------------------
+
+def batch_spec(batch_tree, mesh: Mesh):
+    """tokens/labels (B,S), embeddings/frames/enc_out (B,S,d): B on DP."""
+    da = data_axes(mesh)
+
+    def spec_of(path, leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        spec = [da] + [None] * (nd - 1)
+        return NamedSharding(mesh, _guard(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(spec_of, batch_tree)
+
+
+def cache_spec(cache_tree, mesh: Mesh):
+    """KV caches (B, S, KV, hd): batch on DP, sequence on "model".
+    Recurrent states (B, feats...): batch on DP, features replicated."""
+    da = data_axes(mesh)
+
+    def spec_of(path, leaf):
+        names = _path_names(path)
+        nd = leaf.ndim
+        if nd == 0:
+            return NamedSharding(mesh, P())
+        lead = 1 if "groups" in names else 0
+        if names and names[-1] in ("k", "v") and nd - lead == 4:
+            spec = [None] * lead + [da, "model", None, None]
+        else:
+            spec = [None] * lead + [da] + [None] * (nd - lead - 1)
+        return NamedSharding(mesh, _guard(spec, leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(spec_of, cache_tree)

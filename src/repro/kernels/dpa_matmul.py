@@ -1,0 +1,103 @@
+"""Pallas TPU kernel: trans-precision DPA matmul.
+
+TPU adaptation of the TransDot datapath (DESIGN.md §2): the MXU is a
+128x128 fp32-accumulating systolic dot-product engine — i.e. a very wide
+DPA unit.  The paper's N-term DPA (narrow operands in, one wide
+accumulation out) maps onto:
+
+  HBM -> VMEM   : operands move at format width (fp8 = 1 byte, fp4 = one
+                  uint8 code here / packed nibbles in storage) — the
+                  "fixed-width FPU interface" of the paper becomes HBM
+                  bandwidth actually saved.
+  VMEM decode   : per-block dequant-free *widening* of operand codes into
+                  MXU-ingestible values (the multi-mode multiplier's
+                  operand partitioning).
+  MXU + scratch : fp32 accumulation across the K grid dimension (the
+                  paper's wide adder + the extra DPA pipeline stage: the
+                  accumulator lives across K iterations).
+  epilogue      : per-channel scales applied at the final K step (the
+                  exponent datapath's contribution, hoisted to software
+                  scales as in all block-scaled AI formats).
+
+Block shapes default to MXU-aligned (128 multiples).  Validated on CPU
+via interpret=True against `ref.py`; compiled path targets TPU.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _widen(x, fmt_name: str):
+    """Operand codes/values -> f32 products domain (the multiplier input)."""
+    if fmt_name == "fp4_e2m1":
+        # arithmetic E2M1 decode of uint8 codes (TPU-friendly, no gather):
+        # value = (-1)^s * (e==0 ? m/2 : (1+m/2) * 2^(e-1))
+        c = x.astype(jnp.int32)
+        s = (c >> 3) & 1
+        e = (c >> 1) & 3
+        m = (c & 1).astype(jnp.float32)
+        mag = jnp.where(e == 0, 0.5 * m,
+                        (1.0 + 0.5 * m) * jnp.exp2((e - 1).astype(jnp.float32)))
+        return jnp.where(s == 1, -mag, mag)
+    return x.astype(jnp.float32)
+
+
+def _dpa_matmul_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *,
+                       n_k: int, fmt_x: str, fmt_w: str):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = _widen(x_ref[...], fmt_x)
+    w = _widen(w_ref[...], fmt_w)
+    acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        # epilogue: software exponent path — row scale x column scale
+        o_ref[...] = acc_ref[...] * sx_ref[...] * sw_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_x", "fmt_w", "bm", "bk",
+                                             "bn", "interpret"))
+def dpa_matmul_prequant(xq, wq, sx, sw, *, fmt_x: str, fmt_w: str,
+                        bm: int = 128, bk: int = 128, bn: int = 128,
+                        interpret: bool = True):
+    """(M,K) x (K,N) -> (M,N) f32 with fp32 accumulation.
+
+    xq: quantized operand (native fp8/fp16/bf16 dtype, or uint8 E2M1 codes
+        when fmt_x == "fp4_e2m1");  sx: (M,1) or (1,1) row scales.
+    wq: same on the (K,N) side;     sw: (1,N) or (1,1) column scales.
+    """
+    M, K = xq.shape
+    K2, N = wq.shape
+    assert K == K2, (xq.shape, wq.shape)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, \
+        f"shapes ({M},{K},{N}) must be multiples of blocks ({bm},{bk},{bn})"
+    sx = jnp.broadcast_to(sx.astype(jnp.float32), (M, 1))
+    sw = jnp.broadcast_to(sw.astype(jnp.float32), (1, N))
+    n_k = K // bk
+
+    kernel = functools.partial(_dpa_matmul_kernel, n_k=n_k,
+                               fmt_x=fmt_x, fmt_w=fmt_w)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(xq, wq, sx, sw)

@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: blocked online-softmax attention (forward).
+
+Used by the long-context configs (prefill) where materializing S x S
+logits is the memory-roofline killer.  Standard FlashAttention tiling
+adapted to TPU VMEM: q tiles of (bq, D) stay resident; k/v stream in
+(bk, D) tiles; the running (max, denom, acc) triple lives in VMEM
+scratch.  GQA is handled in the index maps (q-head block -> kv-head
+block via integer division), so grouped heads never duplicate KV in HBM
+— the same "narrow wires, wide accumulator" economics as the DPA GEMM.
+
+Supports causal and sliding-window (RecurrentGemma local attention)
+masks.  Forward only: training configs use XLA attention + remat; the
+kernel serves prefill.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  n_k: int, scale: float, causal: bool, window,
+                  bq: int, bk: int, sq: int, sk: int):
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+    k = k_ref[0].astype(jnp.float32)                  # (bk, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+
+    i = pl.program_id(1)
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (sk - sq)                                   # align cache offsets
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    m_prev = m_ref[...]                               # (bq, 1)
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        p, v_ref[0].astype(jnp.float32), preferred_element_type=jnp.float32)
+    m_ref[...] = m_cur
+
+    @pl.when(j == n_k - 1)
+    def _store():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "scale",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window=None,
+                    scale=None, bq: int = 128, bk: int = 128,
+                    interpret: bool = True):
+    """(B,H,Sq,D),(B,Hkv,Sk,D),(B,Hkv,Sk,D) -> (B,H,Sq,D)."""
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    g = H // Hkv
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    scale_v = float(scale if scale is not None else D ** -0.5)
+
+    qr = q.reshape(B * H, Sq, D)
+    kr = k.reshape(B * Hkv, Sk, D)
+    vr = v.reshape(B * Hkv, Sk, D)
+    kernel = functools.partial(
+        _flash_kernel, n_k=Sk // bk, scale=scale_v, causal=causal,
+        window=window, bq=bq, bk=bk, sq=Sq, sk=Sk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sq // bq, Sk // bk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j, g=g: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, Sq, D)

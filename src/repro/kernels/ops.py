@@ -1,0 +1,85 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+These are what the framework calls: they quantize per the policy, pad to
+block multiples, dispatch the kernel, and undo padding.  On CPU they run
+in interpret mode (`REPRO_PALLAS_INTERPRET=0` to force compiled mode on
+real TPUs).
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.core.policy import TransPrecisionPolicy, get_policy
+from repro.core.quantize import compute_scale, cast_to
+from repro.kernels import dpa_matmul as _dm
+from repro.kernels import flash_attention as _fa
+from repro.kernels import quantize as _q
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+
+def _pad_to(x, mult, axis):
+    r = x.shape[axis] % mult
+    if r == 0:
+        return x, 0
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, mult - r)
+    return jnp.pad(x, pad), mult - r
+
+
+def _quant_operand(x, fmt: str, axis_scale):
+    """-> (codes/native, scale) with scale reduced over `axis_scale`."""
+    if fmt == "fp4_e2m1":
+        from repro.kernels.quantize import _encode_fp4
+        from repro.core.formats import get_format
+        f = get_format(fmt)
+        scale = compute_scale(x, f, axis=axis_scale)
+        q = _encode_fp4(jnp.clip(x.astype(jnp.float32) / scale,
+                                 -f.max_finite, f.max_finite))
+        return q, scale
+    scale = compute_scale(x, fmt, axis=axis_scale)
+    return cast_to(x.astype(jnp.float32) / scale, fmt), scale
+
+
+def dpa_matmul(x, w, policy: TransPrecisionPolicy, *, bm=128, bk=128, bn=128):
+    """Policy-driven trans-precision matmul: x (..., K) @ w (K, N)."""
+    policy = get_policy(policy)
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[-1]
+    x2 = x.reshape(-1, K)
+    xq, sx = _quant_operand(x2, policy.fmt_acts, axis_scale=-1)
+    wq, sw = _quant_operand(w, policy.fmt_weights, axis_scale=0)
+    bm_ = min(bm, max(8, x2.shape[0]))
+    xq, pm = _pad_to(xq, bm_, 0)
+    sxp, _ = _pad_to(sx, bm_, 0)
+    xq, pk = _pad_to(xq, bk, 1)
+    wq, _ = _pad_to(wq, bk, 0)
+    wq, pn = _pad_to(wq, bn, 1)
+    swp, _ = _pad_to(sw, bn, 1)
+    out = _dm.dpa_matmul_prequant(
+        xq, wq, sxp, swp, fmt_x=policy.fmt_acts, fmt_w=policy.fmt_weights,
+        bm=bm_, bk=bk, bn=bn, interpret=INTERPRET)
+    if pm:
+        out = out[: x2.shape[0]]
+    if pn:
+        out = out[:, :N]
+    return out.reshape(*lead, N).astype(x.dtype)
+
+
+def quantize_rows(x, fmt: str, *, bm=128):
+    """Fused absmax+cast row quantization (2D input)."""
+    x2, pm = _pad_to(x, bm, 0)
+    q, s = _q.quantize_rows(x2, fmt=fmt, bm=bm, interpret=INTERPRET)
+    if pm:
+        q, s = q[: x.shape[0]], s[: x.shape[0]]
+    return q, s
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
+                    bq=128, bk=128):
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               scale=scale, bq=bq, bk=bk,
+                               interpret=INTERPRET)

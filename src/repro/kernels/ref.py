@@ -1,0 +1,81 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each function is the semantic specification its kernel is tested against
+(tests/test_kernels.py sweeps shapes x dtypes and assert_allcloses).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.formats import get_format
+from repro.core.quantize import cast_to, compute_scale
+
+
+def widen_ref(x, fmt_name: str):
+    """Reference operand widening (matches dpa_matmul._widen)."""
+    if fmt_name == "fp4_e2m1":
+        c = x.astype(jnp.int32)
+        s = (c >> 3) & 1
+        e = (c >> 1) & 3
+        m = (c & 1).astype(jnp.float32)
+        mag = jnp.where(e == 0, 0.5 * m,
+                        (1.0 + 0.5 * m) * jnp.exp2((e - 1).astype(jnp.float32)))
+        return jnp.where(s == 1, -mag, mag)
+    return x.astype(jnp.float32)
+
+
+def dpa_matmul_ref(xq, wq, sx, sw, *, fmt_x: str, fmt_w: str):
+    """fp32-accumulated matmul over widened operands, scaled epilogue."""
+    x = widen_ref(xq, fmt_x)
+    w = widen_ref(wq, fmt_w)
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return out * sx.astype(jnp.float32) * sw.astype(jnp.float32)
+
+
+def quantize_rows_ref(x, *, fmt: str):
+    """Row-wise absmax quantization (matches kernels.quantize)."""
+    f = get_format(fmt)
+    xf = x.astype(jnp.float32)
+    scale = compute_scale(xf, f, axis=1)
+    y = xf / scale
+    if fmt == "fp4_e2m1":
+        from repro.kernels.quantize import _encode_fp4
+        q = _encode_fp4(jnp.clip(y, -f.max_finite, f.max_finite))
+    else:
+        q = cast_to(y, f)
+    return q, scale
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale=None,
+                        window: int | None = None):
+    """Reference attention: (B,H,Sq,D),(B,Hkv,Sk,D),(B,Hkv,Sk,D)->(B,H,Sq,D).
+
+    GQA: q heads grouped over kv heads.  Optional causal mask and local
+    window (RecurrentGemma-style sliding attention).
+    """
+    B, H, Sq, D = q.shape
+    Hkv = k.shape[1]
+    g = H // Hkv
+    scale = scale if scale is not None else D ** -0.5
+    qf = q.astype(jnp.float32).reshape(B, Hkv, g, Sq, D)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qf, kf) * scale
+    Sk = kf.shape[2]
+    qpos = jnp.arange(Sq)[:, None] + (Sk - Sq)
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, -1e30)
+    probs = _softmax(logits)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, vf)
+    return out.reshape(B, H, Sq, D).astype(q.dtype)
+
+
+def _softmax(x):
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512")
+                           ).strip()
+# ^ MUST run before any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 single-pod /
+2x16x16 multi-pod placeholder devices), constructs ShapeDtypeStruct
+inputs (launch.specs — no allocation), applies the sharding rules
+(distributed.sharding), and runs jit(...).lower(...).compile().  The
+compiled artifact yields:
+
+  memory_analysis()  — proves the program fits per-device HBM
+  cost_analysis()    — HLO FLOPs / bytes for the roofline terms
+  as_text()          — the collective schedule (launch.hlo_analysis)
+
+Records land in experiments/dryrun/<arch>__<shape>__<mesh>.json and are
+aggregated by launch.roofline into EXPERIMENTS.md tables.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen2-72b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--out DIR]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, cell_applicable, get_config, list_archs
+from repro.distributed import sharding as shd
+from repro.distributed.step import (make_prefill_step, make_serve_step,
+                                    make_train_step)
+from repro.launch import hlo_analysis as hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import cell_specs  # noqa: E402
+from repro.models import build_model
+from repro.optim.adamw import AdamWConfig
+
+
+def _mem_analysis(compiled):
+    try:
+        ma = compiled.memory_analysis()
+        if ma is None:
+            return {}
+        keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+                "output_size_in_bytes", "temp_size_in_bytes",
+                "alias_size_in_bytes", "host_generated_code_size_in_bytes",
+                "host_argument_size_in_bytes", "host_temp_size_in_bytes")
+        return {k: getattr(ma, k) for k in keys if hasattr(ma, k)}
+    except Exception as e:                                # pragma: no cover
+        return {"error": repr(e)}
+
+
+def _cost_analysis(compiled):
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        return {k: float(v) for k, v in ca.items()
+                if isinstance(v, (int, float))}
+    except Exception as e:                                # pragma: no cover
+        return {"error": repr(e)}
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               cfg_override=None):
+    """-> (lowered, compiled, record_dict)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg, kind, specs = cell_specs(arch, shape_name, cfg_override)
+    model = build_model(cfg)
+    shd.set_mesh_plan(cfg.mesh_plan)
+    t0 = time.monotonic()
+    with mesh:
+        if kind == "train":
+            step = make_train_step(model, AdamWConfig())
+            state_sh = {
+                "params": shd.make_param_shardings(specs["state"]["params"],
+                                                   mesh),
+                "opt": {"m": shd.make_param_shardings(
+                            specs["state"]["opt"]["m"], mesh),
+                        "v": shd.make_param_shardings(
+                            specs["state"]["opt"]["v"], mesh),
+                        "count": jax.sharding.NamedSharding(
+                            mesh, jax.sharding.PartitionSpec())},
+            }
+            batch_sh = shd.batch_spec(specs["batch"], mesh)
+            jitted = jax.jit(step, in_shardings=(state_sh, batch_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(specs["state"], specs["batch"])
+        elif kind == "prefill":
+            step = make_prefill_step(model)
+            p_sh = shd.make_param_shardings(specs["params"], mesh,
+                                            mode=cfg.serve_param_mode)
+            b_sh = shd.batch_spec(specs["batch"], mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(specs["params"], specs["batch"])
+        else:
+            step = make_serve_step(model)
+            p_sh = shd.make_param_shardings(specs["params"], mesh,
+                                            mode=cfg.serve_param_mode)
+            b_sh = shd.batch_spec(specs["batch"], mesh)
+            c_sh = shd.cache_spec(specs["caches"], mesh)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh, c_sh),
+                             donate_argnums=(2,))
+            lowered = jitted.lower(specs["params"], specs["batch"],
+                                   specs["caches"])
+        t_lower = time.monotonic() - t0
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0 - t_lower
+
+    text = compiled.as_text()
+    coll, coll_records = hlo.collective_bytes(text)
+    cost = _cost_analysis(compiled)
+    record = dict(
+        arch=arch, shape=shape_name, kind=kind,
+        override=cfg_override or {},
+        mesh="2x16x16" if multi_pod else "16x16",
+        n_chips=512 if multi_pod else 256,
+        lower_s=round(t_lower, 2), compile_s=round(t_compile, 2),
+        memory=_mem_analysis(compiled),
+        cost=cost,
+        collective_bytes=coll,
+        collective_total=float(sum(coll.values())),
+        n_collectives=len(coll_records),
+        policy=cfg.policy, dtype=cfg.dtype, remat=cfg.remat,
+        n_params=cfg.n_params, n_active_params=cfg.n_active_params,
+        model_flops=hlo.model_flops(cfg, SHAPES[shape_name], kind),
+    )
+    return lowered, compiled, record
+
+
+def run_cell(arch, shape_name, *, multi_pod=False, out_dir="experiments/dryrun",
+             cfg_override=None, keep_hlo=False):
+    _, compiled, record = lower_cell(arch, shape_name, multi_pod=multi_pod,
+                                     cfg_override=cfg_override)
+    os.makedirs(out_dir, exist_ok=True)
+    tag = f"{arch}__{shape_name}__{record['mesh']}"
+    if cfg_override:
+        tag += "__" + "_".join(f"{k}-{v}" for k, v in
+                               sorted(cfg_override.items()))
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(record, f, indent=1)
+    if keep_hlo:
+        with open(os.path.join(out_dir, tag + ".hlo.txt"), "w") as f:
+            f.write(compiled.as_text())
+    print(f"[dryrun OK] {tag}  compile={record['compile_s']}s "
+          f"flops={record['cost'].get('flops', 0):.3e} "
+          f"coll={record['collective_total']:.3e}B "
+          f"temp={record['memory'].get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+    print("  memory_analysis:", record["memory"])
+    print("  cost_analysis:", {k: v for k, v in record["cost"].items()
+                               if k in ("flops", "bytes accessed",
+                                        "transcendentals")})
+    return record
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--keep-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in list_archs():
+            for s in SHAPES:
+                if cell_applicable(a, s):
+                    cells.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    failures = []
+    for a, s in cells:
+        try:
+            run_cell(a, s, multi_pod=args.multi_pod, out_dir=args.out,
+                     keep_hlo=args.keep_hlo)
+        except Exception:
+            failures.append((a, s))
+            print(f"[dryrun FAIL] {a} {s}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"dry-run failures: {failures}")
+    print(f"all {len(cells)} cells green")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,211 @@
+"""Post-compile HLO analysis: collective traffic + roofline terms.
+
+`collective_bytes` parses the optimized HLO text and accounts each
+communication op with a ring-model byte estimate per device:
+
+    all-gather        out_bytes * (n-1)/n          (~out_bytes)
+    all-reduce        out_bytes * 2(n-1)/n         (~2x)
+    reduce-scatter    out_bytes * (n-1)            (~input bytes)
+    all-to-all        out_bytes * (n-1)/n
+    collective-permute out_bytes
+
+where n is the participant-group size parsed from replica_groups (both
+explicit {{...}} and iota [a,b]<=[...] forms).  The raw per-op records
+are kept so EXPERIMENTS.md can show the schedule, not just the sum.
+"""
+from __future__ import annotations
+
+import math
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1,
+    "f8e5m2": 1, "f8e4m3": 1, "f8e8m0fnu": 1, "f4e2m1fn": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*((?:\([^)]*\))|(?:[a-z0-9]+\[[0-9,]*\]))\S*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    b = n * _DTYPE_BYTES[dtype]
+    return b if _DTYPE_BYTES[dtype] >= 1 else n // 2
+
+
+def _result_bytes(shape_str: str) -> int:
+    """Largest component of the (possibly tuple) result shape."""
+    best = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        best = max(best, _shape_bytes(dtype, dims))
+    return best
+
+
+def _group_size(line: str):
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    return None
+
+
+_COMP_HDR_RE = re.compile(r"^%?([\w.\-]+)\s*\(.*\)\s*->", re.M)
+_WHILE_RE = re.compile(
+    r"while\(.*?\),\s*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:to_apply|calls)=%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _split_computations(hlo_text: str):
+    """-> {comp_name: body_text} by splitting on computation headers."""
+    comps = {}
+    spans = [(m.start(), m.group(1)) for m in _COMP_HDR_RE.finditer(hlo_text)]
+    # the entry computation header uses "ENTRY %name"
+    for m in re.finditer(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M):
+        spans.append((m.start(), m.group(1)))
+    spans.sort()
+    for i, (start, name) in enumerate(spans):
+        end = spans[i + 1][0] if i + 1 < len(spans) else len(hlo_text)
+        comps[name] = hlo_text[start:end]
+    return comps
+
+
+def _wire_bytes(kind: str, out_b: float, n: int) -> float:
+    frac = (n - 1) / n
+    if kind == "all-gather":
+        return out_b * frac
+    if kind == "all-reduce":
+        return out_b * 2 * frac
+    if kind == "reduce-scatter":
+        return out_b * (n - 1)
+    if kind == "all-to-all":
+        return out_b * frac
+    return out_b          # collective-permute
+
+
+def collective_bytes(hlo_text: str):
+    """-> (per-device wire bytes by op kind, op records).
+
+    `while` bodies are multiplied by their trip count (scan-over-layers
+    programs put most collectives inside loops; XLA's own cost analysis
+    counts them once).  Trip counts are read from the largest integer
+    constant in each loop's condition computation — exact for lax.scan
+    lowerings (induction 0..N-1 against constant N).
+    """
+    comps = _split_computations(hlo_text)
+    if not comps:
+        comps = {"__all__": hlo_text}
+
+    # per-computation local collective tallies
+    local = {}
+    for name, body in comps.items():
+        totals = defaultdict(float)
+        records = []
+        for line in body.splitlines():
+            m = _COLL_RE.search(line)
+            if not m:
+                continue
+            shape_str, kind = m.group(1), m.group(2)
+            out_b = _result_bytes(shape_str)
+            n = _group_size(line) or 2
+            wire = _wire_bytes(kind, out_b, n)
+            totals[kind] += wire
+            records.append(dict(kind=kind, out_bytes=out_b, group=n,
+                                wire_bytes=wire))
+        local[name] = (totals, records)
+
+    # call graph with while-trip multipliers
+    children = {name: [] for name in comps}
+    for name, body in comps.items():
+        for m in _WHILE_RE.finditer(body):
+            cond, wbody = m.group(1), m.group(2)
+            consts = [int(c) for c in _CONST_RE.findall(comps.get(cond, ""))]
+            trips = max(consts) if consts else 1
+            children[name].append((wbody, max(trips, 1)))
+        for m in _CALL_RE.finditer(body):
+            callee = m.group(1)
+            if callee in comps:
+                children[name].append((callee, 1))
+
+    def roll_up(name, seen):
+        if name in seen or name not in local:   # cycle / unknown guard
+            return defaultdict(float), []
+        seen = seen | {name}
+        totals = defaultdict(float, local[name][0])
+        records = list(local[name][1])
+        for callee, mult in children.get(name, []):
+            ct, cr = roll_up(callee, seen)
+            for k, v in ct.items():
+                totals[k] += v * mult
+            for r in cr:
+                records.append(dict(r, wire_bytes=r["wire_bytes"] * mult,
+                                    in_loop=mult))
+        return totals, records
+
+    entry = None
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", hlo_text, re.M)
+    if m and m.group(1) in comps:
+        entry = m.group(1)
+    if entry is None:
+        # fall back: sum every computation once
+        agg = defaultdict(float)
+        recs = []
+        for t, r in local.values():
+            for k, v in t.items():
+                agg[k] += v
+            recs.extend(r)
+        return dict(agg), recs
+    totals, records = roll_up(entry, frozenset())
+    return dict(totals), records
+
+
+# -----------------------------------------------------------------------------
+# roofline terms (TPU v5e constants from the assignment)
+# -----------------------------------------------------------------------------
+
+PEAK_FLOPS_BF16 = 197e12        # per chip
+HBM_BW = 819e9                  # B/s per chip
+ICI_BW = 50e9                   # B/s per link
+
+
+def roofline_terms(flops, hbm_bytes, coll_bytes, n_chips,
+                   peak_scale: float = 1.0):
+    """All inputs are whole-program totals per device-program; flops/bytes
+    from cost_analysis are per-device in SPMD modules."""
+    compute_s = flops / (PEAK_FLOPS_BF16 * peak_scale)
+    memory_s = hbm_bytes / HBM_BW
+    coll_s = coll_bytes / ICI_BW
+    dominant = max((compute_s, "compute"), (memory_s, "memory"),
+                   (coll_s, "collective"))[1]
+    total = max(compute_s, memory_s, coll_s)
+    return dict(compute_s=compute_s, memory_s=memory_s,
+                collective_s=coll_s, dominant=dominant, bound_s=total,
+                n_chips=n_chips)
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """MODEL_FLOPS: 6*N*D train (fwd+bwd), 2*N*D inference, N = active."""
+    n = cfg.n_active_params
+    if kind == "train":
+        tokens = shape["batch"] * shape["seq"]
+        return 6.0 * n * tokens
+    if kind == "prefill":
+        tokens = shape["batch"] * shape["seq"]
+        return 2.0 * n * tokens
+    return 2.0 * n * shape["batch"]     # decode: one token per sequence

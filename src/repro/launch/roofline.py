@@ -1,0 +1,120 @@
+"""Roofline aggregation: dry-run records -> per-cell three-term table.
+
+  compute term    = analytic HLO FLOPs / (chips x peak)   [bf16 peak and
+                    the DPA-adjusted peak per the policy format]
+  memory term     = analytic HBM bytes / (chips x HBM bw)
+  collective term = loop-corrected HLO wire bytes / (chips... per-chip
+                    link bw; wire bytes are already per-device)
+
+plus MODEL_FLOPS/HLO_FLOPs and the dominant bottleneck with a one-line
+suggestion.  Reads experiments/dryrun/*.json (written by launch.dryrun);
+emits a markdown table + per-cell suggestions for EXPERIMENTS.md.
+
+Usage: python -m repro.launch.roofline [--dir experiments/dryrun]
+       [--mesh 16x16] [--md experiments/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.hwmodel.throughput import peak_flops_scale
+from repro.launch import analytic as A
+from repro.launch import hlo_analysis as H
+
+SUGGEST = {
+    "compute": "raise DPA term count (fp8->fp4 operands) or cut remat "
+               "recompute (selective checkpointing)",
+    "memory": "quantize the streamed side (weights for decode, cache to "
+              "fp8) — the paper's narrow-wire contract on HBM",
+    "collective": "re-balance mesh axes for this model size (batch onto "
+                  "'model' for small TP gains), sequence-parallel "
+                  "collectives, or fp8 compressed reductions",
+}
+
+
+def load_records(d: str, mesh: str):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(d, f"*__{mesh}.json"))):
+        with open(f) as fh:
+            recs.append(json.load(fh))
+    return recs
+
+
+def cell_roofline(rec: dict):
+    cfg = get_config(rec["arch"])
+    if rec.get("policy") and rec["policy"] != cfg.policy:
+        cfg = cfg.replace(policy=rec["policy"])
+    sh = SHAPES[rec["shape"]]
+    n = rec["n_chips"]
+    kind = rec["kind"]
+    flops = A.cell_flops_per_device(cfg, sh["seq"], sh["batch"], kind, n)
+    hbm = A.cell_hbm_bytes_per_device(cfg, sh["seq"], sh["batch"], kind, n)
+    coll = rec["collective_total"]
+    from repro.core.policy import get_policy
+    pol = get_policy(cfg.policy)
+    scale = peak_flops_scale(pol.fmt_acts) if pol.enabled else 0.5
+    base = H.roofline_terms(flops, hbm, coll, n, peak_scale=1.0)
+    dpa = H.roofline_terms(flops, hbm, coll, n, peak_scale=scale)
+    model_fl = rec["model_flops"] / n
+    util = model_fl / flops
+    # roofline fraction: useful model compute time / achievable bound
+    frac = (model_fl / (H.PEAK_FLOPS_BF16 * scale)) / dpa["bound_s"]
+    return dict(
+        arch=rec["arch"], shape=rec["shape"], kind=kind, mesh=rec["mesh"],
+        compute_s=base["compute_s"], compute_dpa_s=dpa["compute_s"],
+        memory_s=base["memory_s"], collective_s=base["collective_s"],
+        dominant=dpa["dominant"], bound_s=dpa["bound_s"],
+        model_hlo_ratio=util, roofline_frac=frac,
+        temp_gib=rec["memory"].get("temp_size_in_bytes", 0) / 2 ** 30,
+        compile_s=rec["compile_s"],
+        suggest=SUGGEST[dpa["dominant"]],
+    )
+
+
+def markdown_table(rows):
+    hdr = ("| arch | shape | dominant | compute(bf16) s | compute(DPA) s | "
+           "memory s | collective s | MODEL/HLO | roofline frac | "
+           "temp GiB |\n|---|---|---|---|---|---|---|---|---|---|")
+    out = [hdr]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['shape']} | **{r['dominant']}** | "
+            f"{r['compute_s']:.3e} | {r['compute_dpa_s']:.3e} | "
+            f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+            f"{r['model_hlo_ratio']:.2f} | {r['roofline_frac']:.3f} | "
+            f"{r['temp_gib']:.1f} |")
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    ap.add_argument("--md", default=None)
+    args = ap.parse_args()
+    rows = [cell_roofline(r) for r in load_records(args.dir, args.mesh)]
+    rows.sort(key=lambda r: (r["shape"], r["arch"]))
+    table = markdown_table(rows)
+    print(table)
+    print()
+    for r in rows:
+        print(f"- {r['arch']} x {r['shape']}: {r['dominant']}-bound -> "
+              f"{r['suggest']}")
+    if args.md:
+        with open(args.md, "w") as f:
+            f.write(table + "\n")
+    # summary picks for the hillclimb
+    worst = min(rows, key=lambda r: r["roofline_frac"])
+    coll = max(rows, key=lambda r: r["collective_s"] / max(r["bound_s"],
+                                                           1e-12))
+    print(f"\nworst roofline fraction: {worst['arch']} x {worst['shape']} "
+          f"({worst['roofline_frac']:.3f})")
+    print(f"most collective-bound: {coll['arch']} x {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

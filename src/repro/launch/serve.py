@@ -1,0 +1,81 @@
+"""Batched serving driver: prefill + greedy decode with KV caches.
+
+Demonstrates the inference side of the DPA contract: weights quantized to
+the policy format ride the narrow wires (HBM), activations quantize
+per-row, accumulation stays FP32.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+      --batch 4 --prompt-len 32 --gen 16 --policy fp8_dpa
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.distributed.step import make_serve_step
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+
+
+def generate(model, params, prompt, n_gen: int, s_ctx: int):
+    """prompt: (B, S0) -> tokens (B, S0+n_gen).  Greedy."""
+    cfg = model.cfg
+    B, S0 = prompt.shape
+    caches = model.init_caches(B, s_ctx)
+    serve_step = jax.jit(make_serve_step(model), donate_argnums=(2,))
+
+    # prefill by stepping the decode path over the prompt (production uses
+    # model.prefill; stepping exercises the exact serving cache path)
+    tok = prompt[:, :1]
+    toks = [tok]
+    for t in range(S0 + n_gen - 1):
+        nxt, caches = serve_step(
+            params, {"tokens": tok, "index": jnp.int32(t)}, caches)
+        tok = prompt[:, t + 1:t + 2] if t + 1 < S0 else nxt[:, None]
+        toks.append(tok)
+    return jnp.concatenate(toks, axis=1)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--n-model", type=int, default=1)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    if args.policy:
+        cfg = cfg.replace(policy=args.policy)
+    if cfg.family in ("encdec", "vlm") or cfg.frontend == "stub":
+        raise SystemExit("serve demo targets token-in/token-out archs")
+    model = build_model(cfg)
+    mesh = make_host_mesh(n_model=args.n_model)
+    with mesh:
+        params = model.init(jax.random.PRNGKey(0))
+        prompt = jax.random.randint(jax.random.PRNGKey(1),
+                                    (args.batch, args.prompt_len), 0,
+                                    cfg.vocab_size)
+        t0 = time.monotonic()
+        out = generate(model, params, prompt, args.gen,
+                       args.prompt_len + args.gen)
+        out.block_until_ready()
+        wall = time.monotonic() - t0
+        steps = args.prompt_len + args.gen - 1
+        print(f"generated {out.shape} in {wall:.2f}s "
+              f"({steps * args.batch / wall:.1f} tok/s, policy={cfg.policy})")
+        print("sample:", out[0, :24].tolist())
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,111 @@
+"""End-to-end training driver.
+
+Production shape: mesh -> sharded state -> deterministic pipeline ->
+supervised step loop (checkpoint/restart, failure recovery, straggler
+watchdog).  On CPU this runs the reduced configs (examples/) — the same
+code path the dry-run lowers for the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-3b \
+      --reduced --steps 200 --batch 8 --seq 128 --policy fp8_dpa
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.data.pipeline import DataConfig, make_pipeline
+from repro.distributed import sharding as shd
+from repro.distributed.step import make_train_step
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.optim import adamw
+from repro.runtime.fault import Supervisor, SupervisorConfig
+
+
+def build_state(model, key, mesh=None):
+    params = model.init(key)
+    state = {"params": params, "opt": adamw.init(params)}
+    if mesh is not None:
+        shardings = {
+            "params": shd.make_param_shardings(state["params"], mesh),
+            "opt": {"m": shd.make_param_shardings(state["opt"]["m"], mesh),
+                    "v": shd.make_param_shardings(state["opt"]["v"], mesh),
+                    "count": jax.sharding.NamedSharding(
+                        mesh, jax.sharding.PartitionSpec())},
+        }
+        state = jax.device_put(state, shardings)
+        return state, shardings
+    return state, None
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-sized config of the same family")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--policy", default=None)
+    ap.add_argument("--vocab", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--n-model", type=int, default=1)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduce_config(cfg)
+    over = {"max_seq": max(cfg.max_seq, args.seq)}
+    if args.policy:
+        over["policy"] = args.policy
+    if args.vocab:
+        over["vocab_size"] = args.vocab
+    cfg = cfg.replace(**over)
+
+    mesh = make_host_mesh(n_model=args.n_model)
+    model = build_model(cfg)
+    opt_cfg = adamw.AdamWConfig(lr=args.lr, warmup_steps=args.steps // 10 + 1,
+                                total_steps=args.steps)
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, batch=args.batch,
+                          seq=args.seq,
+                          frontend=cfg.frontend,
+                          d_model=cfg.d_model,
+                          frames=16 if cfg.family == "encdec" else 0)
+    pipe = make_pipeline(data_cfg)
+
+    with mesh:
+        state, _ = build_state(model, jax.random.PRNGKey(0), mesh)
+        step_fn = jax.jit(make_train_step(model, opt_cfg),
+                          donate_argnums=(0,))
+        sup = Supervisor(SupervisorConfig(
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every), state=state)
+
+        t_hist = []
+
+        def on_metrics(step, m, dt):
+            t_hist.append(dt)
+            if step % args.log_every == 0:
+                print(f"step {step:5d} loss {float(m['loss']):.4f} "
+                      f"gnorm {float(m['grad_norm']):.3f} "
+                      f"lr {float(m['lr']):.2e} {dt*1e3:.0f}ms")
+
+        t0 = time.monotonic()
+        state = sup.run(step_fn, pipe.batch, args.steps,
+                        on_metrics=on_metrics)
+        wall = time.monotonic() - t0
+        tok_s = args.steps * args.batch * args.seq / wall
+        print(f"done: {args.steps} steps in {wall:.1f}s "
+              f"({tok_s:.0f} tok/s, median step "
+              f"{sorted(t_hist)[len(t_hist)//2]*1e3:.0f}ms)")
+    return state
+
+
+if __name__ == "__main__":
+    main()

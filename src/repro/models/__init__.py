@@ -1,0 +1,4 @@
+from .config import ModelConfig
+from .registry import build_model
+
+__all__ = ["ModelConfig", "build_model"]

@@ -1,0 +1,600 @@
+"""Layer library for the model zoo.
+
+Every projection routes through `repro.core.linear.apply_linear` — the
+DPA execution contract — so the paper's technique is a first-class policy
+on all ten architectures.  Layers are functional: init_* returns a params
+pytree, apply_* consumes it.  Decode paths carry explicit caches/states.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.linear import apply_linear, init_linear
+from repro.core.policy import get_policy
+from repro.distributed.sharding import maybe_shard
+
+# -----------------------------------------------------------------------------
+# norms
+# -----------------------------------------------------------------------------
+
+def init_norm(d: int, kind: str = "rmsnorm"):
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(params, x, *, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if "bias" in params:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"] + params["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+# -----------------------------------------------------------------------------
+# rotary position embedding
+# -----------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: (B, S, H, hd), positions: (S,) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
+                    / half)
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -----------------------------------------------------------------------------
+# attention (GQA, optional qk-norm / bias / sliding window / cross / cache)
+# -----------------------------------------------------------------------------
+
+def init_attention(key, cfg):
+    d, hd = cfg.d_model, cfg.hd
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": init_linear(ks[0], d, cfg.n_heads * hd, bias=cfg.qkv_bias),
+        "wk": init_linear(ks[1], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wv": init_linear(ks[2], d, cfg.n_kv_heads * hd, bias=cfg.qkv_bias),
+        "wo": init_linear(ks[3], cfg.n_heads * hd, d),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = init_norm(hd)
+        p["k_norm"] = init_norm(hd)
+    return p
+
+
+def _sdpa(q, k, v, *, causal, window, offset, valid=None, use_flash=False,
+          q_chunk=0):
+    """q: (B,Sq,H,hd); k/v: (B,Skv,KV,hd) -> (B,Sq,H,hd).
+
+    offset: index of q position 0 within the kv timeline.
+    valid: optional (Skv,) bool — extra key-slot mask (sliding caches).
+    q_chunk: scan over query blocks so the (Sq,Skv) score matrix never
+    materializes whole — the XLA-native flash-attention memory shape.
+    """
+    B, Sq, H, hd = q.shape
+    Skv, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    if use_flash and Sq > 1 and valid is None:
+        from repro.kernels import ops as kops
+        out = kops.flash_attention(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=causal, window=window)
+        return out.transpose(0, 2, 1, 3)
+    if q_chunk and Sq > q_chunk and Sq % q_chunk == 0 and valid is None:
+        @jax.checkpoint
+        def chunk(i):
+            # checkpointed: the (q_chunk, Skv) logits are recomputed in
+            # backward instead of being saved for every chunk (saving them
+            # re-materializes the full S^2 matrix the chunking avoids)
+            qs = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, 1)
+            return _sdpa(qs, k, v, causal=causal, window=window,
+                         offset=offset + i * q_chunk)
+        out = jax.lax.map(chunk, jnp.arange(Sq // q_chunk))
+        return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
+    kh = jnp.repeat(k, g, axis=2)     # (B, Skv, H, hd) — GQA expansion
+    vh = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q, kh,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (hd ** -0.5)
+    qpos = offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None and window > 0:
+        mask = mask & (kpos > qpos - window)
+    if valid is not None:
+        mask = mask & valid[None, :]
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, vh)
+
+
+def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
+                    window=None, causal=True, use_rope=True,
+                    cache_mode: str = "full"):
+    """Returns (y, new_cache).
+
+    cache_mode "full":   cache {"k","v": (B, S_ctx, KV, hd)}; k/v written at
+                         `offset`, causal mask handles unfilled tail.
+    cache_mode "window": sliding cache of length W kept in time order (shift
+                         left + append on decode; last-W slice on prefill);
+                         unfilled leading slots masked via `offset`.
+    """
+    policy = get_policy(cfg.policy)
+    B, Sq, _ = x.shape
+    hd = cfg.hd
+    q = maybe_shard(apply_linear(params["wq"], x, policy),
+                    "data", None, "model").reshape(B, Sq, cfg.n_heads, hd)
+    q = maybe_shard(q, "data", None, "model", None)
+    if cross_kv is not None:
+        k, v = cross_kv["k"], cross_kv["v"]
+    else:
+        k = maybe_shard(apply_linear(params["wk"], x, policy),
+                        "data", None, "model").reshape(B, Sq,
+                                                       cfg.n_kv_heads, hd)
+        v = maybe_shard(apply_linear(params["wv"], x, policy),
+                        "data", None, "model").reshape(B, Sq,
+                                                       cfg.n_kv_heads, hd)
+    if "q_norm" in params:
+        q = apply_norm(params["q_norm"], q, eps=cfg.norm_eps)
+        k = apply_norm(params["k_norm"], k, eps=cfg.norm_eps) \
+            if cross_kv is None else k
+    if use_rope and cross_kv is None:
+        pos = offset + jnp.arange(Sq)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+    new_cache = cache
+    valid = None
+    sdpa_offset = offset
+    sdpa_causal = causal and cross_kv is None
+    sdpa_window = window
+    if (cache is not None and cross_kv is None and Sq == 1
+            and cache_mode == "full" and cfg.flash_decode):
+        from repro.distributed.sharding import _ambient_mesh
+        mesh = _ambient_mesh()
+        S_ctx = cache["k"].shape[1]
+        if (mesh is not None and "model" in mesh.axis_names
+                and S_ctx % mesh.shape["model"] == 0):
+            from repro.models.decode_attn import flash_decode
+            y, kc, vc = flash_decode(q, k, v, cache["k"], cache["v"],
+                                     offset, mesh, scale=hd ** -0.5)
+            y = maybe_shard(y.reshape(B, Sq, cfg.n_heads * hd),
+                            "data", None, "model")
+            y = apply_linear(params["wo"], y, policy)
+            return maybe_shard(y, "data", "model", None), {"k": kc, "v": vc}
+    if cache is not None and cross_kv is None:
+        W = cache["k"].shape[1]
+        cdt = cache["k"].dtype
+        if cache_mode == "window":
+            if Sq == 1:   # decode: shift left, append current
+                kc = jnp.roll(cache["k"], -1, axis=1).at[:, -1].set(
+                    k[:, 0].astype(cdt))
+                vc = jnp.roll(cache["v"], -1, axis=1).at[:, -1].set(
+                    v[:, 0].astype(cdt))
+                # slot s holds position offset - (W-1-s); valid iff >= 0
+                filled = jnp.minimum(offset + 1, W)
+                valid = jnp.arange(W) >= (W - filled)
+                sdpa_causal = False
+                sdpa_window = None
+                sdpa_offset = 0
+            else:         # prefill: keep last W in order (left-pad zeros)
+                pad = max(0, W - Sq)
+                kc = jnp.pad(k[:, -W:], ((0, 0), (pad, 0), (0, 0), (0, 0))
+                             ).astype(cdt)
+                vc = jnp.pad(v[:, -W:], ((0, 0), (pad, 0), (0, 0), (0, 0))
+                             ).astype(cdt)
+            new_cache = {"k": kc, "v": vc}
+            if Sq == 1:
+                k, v = kc.astype(x.dtype), vc.astype(x.dtype)
+        else:
+            z = jnp.zeros((), jnp.int32)
+            off = jnp.asarray(offset, jnp.int32)
+            kc = jax.lax.dynamic_update_slice(
+                cache["k"], k.astype(cdt), (z, off, z, z))
+            vc = jax.lax.dynamic_update_slice(
+                cache["v"], v.astype(cdt), (z, off, z, z))
+            new_cache = {"k": kc, "v": vc}
+            k, v = kc.astype(x.dtype), vc.astype(x.dtype)
+    y = _sdpa(q, k, v, causal=sdpa_causal, window=sdpa_window,
+              offset=sdpa_offset if (cache is not None or Sq > 1) else 0,
+              valid=valid, use_flash=cfg.use_flash,
+              q_chunk=cfg.attn_chunk)
+    y = maybe_shard(y.reshape(B, Sq, cfg.n_heads * hd),
+                    "data", None, "model")
+    y = apply_linear(params["wo"], y, policy)
+    return maybe_shard(y, "data", "model", None), new_cache
+
+
+# -----------------------------------------------------------------------------
+# MLP (SwiGLU / GELU)
+# -----------------------------------------------------------------------------
+
+def init_mlp(key, cfg, d_ff=None):
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if cfg.act == "silu":
+        return {"wg": init_linear(ks[0], d, f), "wu": init_linear(ks[1], d, f),
+                "wd": init_linear(ks[2], f, d)}
+    return {"wu": init_linear(ks[0], d, f, bias=True),
+            "wd": init_linear(ks[1], f, d, bias=True)}
+
+
+def apply_mlp(params, x, cfg):
+    policy = get_policy(cfg.policy)
+    if "wg" in params:
+        g = maybe_shard(apply_linear(params["wg"], x, policy),
+                        "data", None, "model")
+        u = maybe_shard(apply_linear(params["wu"], x, policy),
+                        "data", None, "model")
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    else:
+        u = maybe_shard(apply_linear(params["wu"], x, policy),
+                        "data", None, "model")
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    return maybe_shard(apply_linear(params["wd"], h, cfg.policy),
+                       "data", "model", None)
+
+
+# -----------------------------------------------------------------------------
+# MoE: top-k routing with sort-based capacity dispatch (EP-shardable)
+# -----------------------------------------------------------------------------
+
+def init_moe(key, cfg):
+    from repro.core.linear import init_grouped_linear
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {"router": init_linear(ks[0], d, E)}
+    if cfg.act == "silu":
+        p["wg"] = init_grouped_linear(ks[1], E, d, f)
+        p["wu"] = init_grouped_linear(ks[2], E, d, f)
+        p["wd"] = init_grouped_linear(ks[3], E, f, d)
+    else:
+        p["wu"] = init_grouped_linear(ks[1], E, d, f)
+        p["wd"] = init_grouped_linear(ks[2], E, f, d)
+    return p
+
+
+def apply_moe(params, x, cfg):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    GShard-style *group-local* dispatch: each batch row routes its own S
+    tokens into an (E, C, d) buffer (C = cf*S*K/E), so the sort/scatter
+    is local to the row and SPMD keeps all dispatch data-parallel on the
+    batch axis; only the grouped expert einsum (E on the "model" axis)
+    communicates — this is what keeps the MoE memory/collective footprint
+    sane at 256+ chips (no global (T,E,C) tensors, no global sort)."""
+    policy = get_policy(cfg.policy)
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = int(cfg.capacity_factor * S * K / E) + 1
+
+    logits = apply_linear(params["router"], x.astype(jnp.float32), "fp32")
+    probs = jax.nn.softmax(logits, axis=-1)                      # (B, S, E)
+    gate_w, gate_i = jax.lax.top_k(probs, K)                     # (B, S, K)
+    gate_w = gate_w / jnp.maximum(gate_w.sum(-1, keepdims=True), 1e-9)
+
+    # aux load-balancing loss (Switch style), computed globally
+    density = jnp.mean(
+        jax.nn.one_hot(gate_i[..., 0], E, dtype=jnp.float32), (0, 1))
+    density_prob = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(density * density_prob) * E * cfg.router_aux_coef
+
+    def dispatch_row(xt, ge, gw):
+        """xt (S,d), ge/gw (S,K) -> (buf (E,C,d), combine metadata)."""
+        flat_e = ge.reshape(-1)                                  # (S*K,)
+        order = jnp.argsort(flat_e)
+        sorted_e = flat_e[order]
+        counts = jnp.bincount(sorted_e, length=E)
+        start = jnp.cumsum(counts) - counts
+        pos = jnp.arange(S * K) - start[sorted_e]
+        keep = pos < C
+        tok = order // K
+        pos_c = jnp.where(keep, pos, 0)
+        buf = jnp.zeros((E, C, d), xt.dtype)
+        buf = buf.at[sorted_e, pos_c].add(
+            jnp.where(keep[:, None], xt[tok], 0).astype(xt.dtype))
+        return buf, (sorted_e, pos_c, keep, tok, gw.reshape(-1)[order])
+
+    buf, meta = jax.vmap(dispatch_row)(x, gate_i, gate_w)        # (B,E,C,d)
+    buf = maybe_shard(buf, "data", "model", None, None)
+
+    from repro.core.quantize import fake_quant
+    acc_t = jnp.float32 if policy.accum == "fp32" else jnp.float16
+
+    def expert_mm(name, z):
+        w = params[name]["w"]
+        if str(w.dtype) in ("float8_e4m3fn", "float8_e5m2", "float4_e2m1fn"):
+            from repro.core.quantize import cast_to, compute_scale
+            sz = compute_scale(z, policy.fmt_acts, axis=-1)
+            zq = cast_to(z.astype(jnp.float32) / sz, policy.fmt_acts)
+            out = jnp.einsum("becd,edf->becf", zq, w,
+                             preferred_element_type=jnp.float32) * sz
+            return out.astype(x.dtype)
+        w = w.astype(z.dtype)
+        if policy.enabled:
+            w = fake_quant(w, policy.fmt_weights, axis=1)
+            z = fake_quant(z, policy.fmt_acts)
+        return jnp.einsum("becd,edf->becf", z, w,
+                          preferred_element_type=acc_t).astype(x.dtype)
+
+    if "wg" in params:
+        h = jax.nn.silu(expert_mm("wg", buf).astype(jnp.float32)
+                        ).astype(x.dtype) * expert_mm("wu", buf)
+    else:
+        h = jax.nn.gelu(expert_mm("wu", buf).astype(jnp.float32)
+                        ).astype(x.dtype)
+    out_buf = expert_mm("wd", h)                                 # (B,E,C,d)
+
+    def combine_row(ob, m):
+        sorted_e, pos_c, keep, tok, w = m
+        g = ob[sorted_e, pos_c]                                  # (S*K, d)
+        g = jnp.where(keep[:, None], g, 0)
+        return jnp.zeros((S, d), x.dtype).at[tok].add(
+            (g.astype(jnp.float32) * w[:, None]).astype(x.dtype))
+
+    y = jax.vmap(combine_row)(out_buf, meta)
+    return maybe_shard(y, "data", "model", None), aux
+
+
+# -----------------------------------------------------------------------------
+# RG-LRU recurrent block (RecurrentGemma / Griffin)
+# -----------------------------------------------------------------------------
+
+def init_rglru(key, cfg):
+    d = cfg.d_model
+    dr = cfg.d_rnn or d
+    ks = jax.random.split(key, 6)
+    # Lambda init so that a = exp(-c*softplus(L)*sigmoid(r)) starts near 0.9..0.999
+    lam = jnp.log(jnp.expm1(jnp.linspace(0.9, 4.0, dr)))  # softplus^-1
+    return {
+        "wx": init_linear(ks[0], d, dr),
+        "wgate": init_linear(ks[1], d, dr),
+        "conv": jax.random.normal(ks[2], (cfg.conv_width, dr), jnp.float32)
+                * (cfg.conv_width * dr) ** -0.5,
+        "w_ig": init_linear(ks[3], d, dr),     # input gate
+        "lam": lam.astype(jnp.float32),
+        "wo": init_linear(ks[4], dr, d),
+    }
+
+
+_RG_C = 8.0
+
+
+def _rglru_coeffs(params, x, cfg, policy):
+    """-> (a, bx) with h_t = a_t * h_{t-1} + bx_t, all (B, S, dr)."""
+    xb = maybe_shard(apply_linear(params["wx"], x, policy),
+                     "data", None, "model")
+    gate = apply_linear(params["wgate"], x, policy).astype(jnp.float32)
+    igate = apply_linear(params["w_ig"], x, policy).astype(jnp.float32)
+    log_a = -_RG_C * jax.nn.softplus(params["lam"]) * jax.nn.sigmoid(gate)
+    a = jnp.exp(log_a)
+    mult = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    bx = mult * jax.nn.sigmoid(igate) * xb.astype(jnp.float32)
+    return a, bx
+
+
+def _conv1d(x, w, state=None):
+    """Causal depthwise conv: x (B,S,dr), w (cw, dr).  state: (B, cw-1, dr)."""
+    cw = w.shape[0]
+    if state is None:
+        pad = jnp.zeros(x.shape[:1] + (cw - 1,) + x.shape[2:], x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    new_state = xp[:, -(cw - 1):] if cw > 1 else None
+    return out.astype(x.dtype), new_state
+
+
+def apply_rglru(params, x, cfg, *, state=None):
+    """x: (B,S,d) -> (y, new_state).  state: {"h": (B,dr), "conv": ...}."""
+    policy = get_policy(cfg.policy)
+    xc, conv_state = _conv1d(x, params["conv"],
+                             None if state is None else state["conv"])
+    a, bx = _rglru_coeffs(params, xc, cfg, policy)
+    h0 = None if state is None else state["h"]
+    if x.shape[1] == 1 and h0 is not None:        # decode step
+        h = a[:, 0] * h0 + bx[:, 0]
+        hs = h[:, None]
+    else:
+        if h0 is not None:
+            bx = bx.at[:, 0].add(a[:, 0] * h0)
+        # associative scan: (a2,b2) o (a1,b1) = (a1*a2, a2*b1 + b2)
+        def comb(c1, c2):
+            return (c1[0] * c2[0], c2[0] * c1[1] + c2[1])
+        aa, hs = jax.lax.associative_scan(comb, (a, bx), axis=1)
+        h = hs[:, -1]
+    y = apply_linear(params["wo"], hs.astype(x.dtype), policy)
+    new_state = {"h": h, "conv": conv_state}
+    return y, new_state
+
+
+# -----------------------------------------------------------------------------
+# xLSTM: chunkwise-parallel mLSTM + sequential sLSTM
+# -----------------------------------------------------------------------------
+
+def init_mlstm(key, cfg):
+    d, hd = cfg.d_model, cfg.hd
+    H = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": init_linear(ks[0], d, H * hd),
+        "wk": init_linear(ks[1], d, H * hd),
+        "wv": init_linear(ks[2], d, H * hd),
+        "wi": init_linear(ks[3], d, H),    # input gate (exp)
+        "wf": init_linear(ks[4], d, H),    # forget gate
+        "wo_gate": init_linear(ks[5], d, H * hd),
+        "wo": init_linear(ks[6], H * hd, d),
+    }
+
+
+def _mlstm_chunk_scan(q, k, v, log_f, log_i, state, hd_scale):
+    """Chunkwise-parallel stabilized mLSTM.
+
+    q,k,v: (B, N, Ck, H, hd); log_f/log_i: (B, N, Ck, H).
+    state: (C0: (B,H,hd,hd), n0: (B,H,hd), m0: (B,H)).
+    Returns (h: (B,N,Ck,H,hd), final state).
+    """
+    B, N, Ck, H, hd = q.shape
+
+    def step(carry, xs):
+        C0, n0, m0 = carry
+        qc, kc, vc, lf, li = xs            # (B,Ck,H,hd), ..., (B,Ck,H)
+        cum_f = jnp.cumsum(lf, axis=1)                       # (B,Ck,H)
+        # intra-chunk decay matrix D[t,s] = exp(cum_f_t - cum_f_s + li_s)
+        lD = (cum_f[:, :, None] - cum_f[:, None, :]
+              + li[:, None, :, :])                            # (B,Ck,Ck,H)
+        tri = jnp.tril(jnp.ones((Ck, Ck), bool))
+        lD = jnp.where(tri[None, :, :, None], lD, -jnp.inf)
+        # inter-chunk contribution decays from m0
+        l_inter = cum_f + m0[:, None, :]                      # (B,Ck,H)
+        m_t = jnp.maximum(jnp.max(lD, axis=2), l_inter)       # (B,Ck,H)
+        D = jnp.exp(lD - m_t[:, :, None])                     # (B,Ck,Ck,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * hd_scale
+        w_ts = scores * D                                     # (B,Ck,Ck,H)
+        h_num = jnp.einsum("btsh,bshd->bthd", w_ts, vc)
+        h_den = jnp.einsum("btsh,bsh->bth", w_ts,
+                           jnp.ones(kc.shape[:3], kc.dtype))
+        # inter-chunk: q_t decayed against C0/n0
+        fac = jnp.exp(l_inter - m_t)                          # (B,Ck,H)
+        q_eff = qc * fac[..., None] * hd_scale
+        h_num = h_num + jnp.einsum("bthd,bhde->bthe", q_eff, C0)
+        h_den = h_den + jnp.einsum("bthd,bhd->bth", q_eff, n0)
+        floor = jnp.exp(jnp.clip(-m_t, -60.0, 60.0))
+        h = h_num / jnp.maximum(jnp.abs(h_den), floor)[..., None]
+        # state update to end of chunk:
+        # decay(s -> end) = exp(f_sum - cum_f_s), so the stabilizer is
+        # m_next = max(f_sum + m0, max_s(f_sum - cum_f_s + li_s))
+        f_sum = cum_f[:, -1]                                  # (B,H)
+        m_next = jnp.maximum(f_sum + m0,
+                             f_sum + jnp.max(li - cum_f, axis=1))
+        k_dec = jnp.exp(f_sum[:, None] - cum_f + li - m_next[:, None])
+        C1 = C0 * jnp.exp(f_sum + m0 - m_next)[..., None, None] \
+            + jnp.einsum("bsh,bshd,bshe->bhde", k_dec, kc, vc)
+        n1 = n0 * jnp.exp(f_sum + m0 - m_next)[..., None] \
+            + jnp.einsum("bsh,bshd->bhd", k_dec, kc)
+        return (C1, n1, m_next), h
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          log_f.swapaxes(0, 1), log_i.swapaxes(0, 1))
+    state, hs = jax.lax.scan(step, state, xs)
+    return hs.swapaxes(0, 1), state
+
+
+def apply_mlstm(params, x, cfg, *, state=None):
+    """x: (B,S,d) -> (y, new_state)."""
+    policy = get_policy(cfg.policy)
+    B, S, d = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    q = apply_linear(params["wq"], x, policy).reshape(B, S, H, hd)
+    k = apply_linear(params["wk"], x, policy).reshape(B, S, H, hd)
+    v = apply_linear(params["wv"], x, policy).reshape(B, S, H, hd)
+    li = apply_linear(params["wi"], x, policy).astype(jnp.float32)  # (B,S,H)
+    lf = jax.nn.log_sigmoid(
+        apply_linear(params["wf"], x, policy).astype(jnp.float32))
+    og = jax.nn.sigmoid(
+        apply_linear(params["wo_gate"], x, policy).astype(jnp.float32))
+
+    if state is None:
+        state = (jnp.zeros((B, H, hd, hd), jnp.float32),
+                 jnp.zeros((B, H, hd), jnp.float32),
+                 jnp.zeros((B, H), jnp.float32))
+    Ck = min(cfg.chunk, S)
+    assert S % Ck == 0, (S, Ck)
+    N = S // Ck
+    shp = (B, N, Ck, H)
+    hs, state = _mlstm_chunk_scan(
+        q.reshape(shp + (hd,)).astype(jnp.float32),
+        k.reshape(shp + (hd,)).astype(jnp.float32),
+        v.reshape(shp + (hd,)).astype(jnp.float32),
+        lf.reshape(shp), li.reshape(shp), state, hd ** -0.5)
+    h = hs.reshape(B, S, H, hd) * og.reshape(B, S, H, hd)
+    y = apply_linear(params["wo"], h.reshape(B, S, H * hd).astype(x.dtype),
+                     policy)
+    return y, state
+
+
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {"wz": init_linear(ks[0], d, d), "wi": init_linear(ks[1], d, d),
+            "wf": init_linear(ks[2], d, d), "wo_gate": init_linear(ks[3], d, d),
+            "r": jax.random.normal(ks[4], (4, d), jnp.float32) * d ** -0.5,
+            "wo": init_linear(ks[5], d, d)}
+
+
+def apply_slstm(params, x, cfg, *, state=None):
+    """Sequential sLSTM with diagonal recurrent weights (per-channel r).
+    x: (B,S,d) -> (y, state). state: (c,n,h,m) each (B,d)."""
+    policy = get_policy(cfg.policy)
+    B, S, d = x.shape
+    zx = apply_linear(params["wz"], x, policy).astype(jnp.float32)
+    ix = apply_linear(params["wi"], x, policy).astype(jnp.float32)
+    fx = apply_linear(params["wf"], x, policy).astype(jnp.float32)
+    ox = apply_linear(params["wo_gate"], x, policy).astype(jnp.float32)
+    r = params["r"]
+    if state is None:
+        z0 = jnp.zeros((B, d), jnp.float32)
+        state = (z0, z0, z0, z0 - 10.0)
+
+    def step(carry, xs):
+        c, n, h, m = carry
+        zt, it, ft, ot = xs
+        z = jnp.tanh(zt + r[0] * h)
+        li = it + r[1] * h
+        lf = jax.nn.log_sigmoid(ft + r[2] * h)
+        m1 = jnp.maximum(lf + m, li)
+        i_s = jnp.exp(li - m1)
+        f_s = jnp.exp(lf + m - m1)
+        c1 = f_s * c + i_s * z
+        n1 = f_s * n + i_s
+        h1 = jax.nn.sigmoid(ot + r[3] * h) * c1 / jnp.maximum(n1, 1e-6)
+        return (c1, n1, h1, m1), h1
+
+    xs = (zx.swapaxes(0, 1), ix.swapaxes(0, 1), fx.swapaxes(0, 1),
+          ox.swapaxes(0, 1))
+    state, hs = jax.lax.scan(step, state, xs)
+    y = apply_linear(params["wo"], hs.swapaxes(0, 1).astype(x.dtype), policy)
+    return y, state
+
+
+# -----------------------------------------------------------------------------
+# embeddings / unembedding
+# -----------------------------------------------------------------------------
+
+def init_embedding(key, vocab: int, d: int):
+    return {"table": jax.random.normal(key, (vocab, d), jnp.float32) * 0.02}
+
+
+def apply_embedding(params, ids, dtype):
+    # residual stream is (batch, seq, d) with sequence-parallel layout
+    return maybe_shard(params["table"].astype(dtype)[ids],
+                       "data", "model", None)
+
+
+def apply_unembed(params, x, *, table=None):
+    """x: (B,S,d) -> logits (B,S,V), fp32 *accumulation* over compute-
+    dtype operands (the DPA contract; casting the whole table to f32
+    costs a hoisted V*d f32 buffer — 4.6 GiB on qwen2)."""
+    w = table if table is not None else params["table"]
+    out = jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype),
+                     preferred_element_type=jnp.float32)
+    return maybe_shard(out, "data", None, "model")

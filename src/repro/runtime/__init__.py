@@ -1,0 +1,1 @@
+from . import checkpoint, fault  # noqa: F401

@@ -1,0 +1,139 @@
+"""Sharded, atomic, async checkpointing with elastic restore.
+
+Layout:  <dir>/step_<N>/
+            meta.json            (step, tree structure, shapes, dtypes)
+            shard_<i>.npz        (flattened leaves, chunked)
+         <dir>/LATEST            (atomic pointer file)
+
+Writes go to a tmp directory first and are renamed into place, so a crash
+mid-save never corrupts the latest checkpoint.  `save_async` runs the
+serialization on a background thread (training continues on device).
+Restore accepts a *different* mesh/sharding than the save ran with
+(elastic scaling): leaves are loaded on host and re-placed with the new
+sharding.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+_FLAT_SEP = "||"
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _FLAT_SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(state, step: int, ckpt_dir: str, *, shard_mb: int = 512) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    flat = _flatten(state)
+    # chunk into shards by size
+    shards, cur, cur_bytes = [], {}, 0
+    for k, v in flat.items():
+        cur[k] = v
+        cur_bytes += v.nbytes
+        if cur_bytes >= shard_mb * (1 << 20):
+            shards.append(cur)
+            cur, cur_bytes = {}, 0
+    if cur:
+        shards.append(cur)
+    meta = {"step": step, "n_shards": len(shards),
+            "keys": {k: [list(v.shape), str(v.dtype)]
+                     for k, v in flat.items()}}
+    for i, sh in enumerate(shards):
+        np.savez(os.path.join(tmp, f"shard_{i}.npz"),
+                 **{k: v for k, v in sh.items()})
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    # atomic LATEST pointer
+    ptr_tmp = os.path.join(ckpt_dir, ".LATEST.tmp")
+    with open(ptr_tmp, "w") as f:
+        f.write(os.path.basename(final))
+    os.replace(ptr_tmp, os.path.join(ckpt_dir, "LATEST"))
+    return final
+
+
+class AsyncSaver:
+    """One in-flight save at a time; join() before exit."""
+
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, state, step: int, ckpt_dir: str):
+        self.join()
+        host_state = jax.tree.map(np.asarray, state)   # device->host now
+        self._thread = threading.Thread(
+            target=save, args=(host_state, step, ckpt_dir), daemon=True)
+        self._thread.start()
+
+    def join(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    ptr = os.path.join(ckpt_dir, "LATEST")
+    if not os.path.exists(ptr):
+        return None
+    with open(ptr) as f:
+        name = f.read().strip()
+    if not os.path.exists(os.path.join(ckpt_dir, name)):
+        return None
+    return int(name.split("_")[-1])
+
+
+def restore(ckpt_dir: str, target, *, step: Optional[int] = None,
+            shardings=None):
+    """Load into the structure of `target` (a pytree of arrays or
+    ShapeDtypeStructs).  `shardings`: optional matching pytree of
+    NamedShardings for elastic re-placement on a new mesh."""
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+    with open(os.path.join(d, "meta.json")) as f:
+        meta = json.load(f)
+    data = {}
+    for i in range(meta["n_shards"]):
+        with np.load(os.path.join(d, f"shard_{i}.npz")) as z:
+            data.update({k: z[k] for k in z.files})
+
+    paths, treedef = jax.tree_util.tree_flatten_with_path(target)
+    shard_leaves = jax.tree.leaves(shardings) if shardings is not None \
+        else [None] * len(paths)
+    leaves = []
+    for (path, leaf), shd in zip(paths, shard_leaves):
+        key = _FLAT_SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        if shd is not None:
+            arr = jax.device_put(arr, shd)
+        leaves.append(arr)
+    return treedef.unflatten(leaves), step

@@ -1,0 +1,130 @@
+"""Per-architecture smoke tests: reduced config of the same family, one
+forward/train step on CPU, asserting output shapes + no NaNs, plus a
+prefill->decode consistency probe."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs, reduce_config
+from repro.distributed.step import make_train_step
+from repro.models import build_model
+from repro.optim import adamw
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    b = {}
+    if cfg.family == "encdec":
+        b["frames"] = jax.random.normal(key, (B, 8, cfg.d_model),
+                                        jnp.float32)
+        b["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    elif cfg.frontend == "stub":
+        b["embeddings"] = jax.random.normal(key, (B, S, cfg.d_model),
+                                            jnp.float32)
+    else:
+        b["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    b["labels"] = jax.random.randint(jax.random.fold_in(key, 1), (B, S),
+                                     0, cfg.vocab_size)
+    return b
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_train_step(arch):
+    cfg = reduce_config(get_config(arch))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(0)
+    params = model.init(key)
+    batch = _batch(cfg, key)
+
+    logits, aux = model.train_logits(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size), arch
+    assert bool(jnp.isfinite(logits).all()), arch
+
+    state = {"params": params, "opt": adamw.init(params)}
+    step = jax.jit(make_train_step(model, adamw.AdamWConfig(lr=1e-3,
+                                                            total_steps=10)))
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    assert np.isfinite(float(metrics["grad_norm"])), arch
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree.leaves(state["params"]), jax.tree.leaves(params)))
+    assert delta > 0, arch
+
+
+@pytest.mark.parametrize("arch", list_archs())
+def test_arch_smoke_decode_step(arch):
+    cfg = reduce_config(get_config(arch))
+    model = build_model(cfg)
+    key = jax.random.PRNGKey(1)
+    params = model.init(key)
+    caches = model.init_caches(B, 16)
+    batch = {"tokens": jnp.ones((B, 1), jnp.int32), "index": jnp.int32(3)}
+    if cfg.family == "encdec":
+        batch["enc_out"] = jnp.zeros((B, 8, cfg.d_model), jnp.float32)
+    logits, caches2 = model.decode_step(params, batch, caches)
+    assert logits.shape == (B, 1, cfg.vocab_size), arch
+    assert bool(jnp.isfinite(logits).all()), arch
+    # caches structurally preserved
+    assert jax.tree.structure(caches) == jax.tree.structure(caches2), arch
+
+
+@pytest.mark.parametrize("arch", ["qwen2-72b", "recurrentgemma-9b",
+                                  "xlstm-1.3b", "granite-moe-1b-a400m"])
+def test_decode_matches_train(arch):
+    """Teacher-forced decode must reproduce the train-time logits."""
+    # policy=fp32: dynamic per-tensor activation scales legitimately
+    # differ between full-sequence and single-token batches, so the
+    # cache/state equivalence is tested on the unquantized path.
+    # capacity_factor=8: MoE capacity drops hit full sequences but never
+    # single-token decode — also a legitimate train/serve asymmetry.
+    cfg = reduce_config(get_config(arch)).replace(policy="fp32",
+                                                  capacity_factor=8.0)
+    if cfg.frontend == "stub" or cfg.family == "encdec":
+        pytest.skip("token-in archs only")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(2))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, 16), 0,
+                              cfg.vocab_size)
+    full, _ = model.train_logits(params, {"tokens": toks})
+    caches = model.init_caches(B, 16)
+    errs = []
+    for t in range(16):
+        lg, caches = model.decode_step(
+            params, {"tokens": toks[:, t:t + 1], "index": jnp.int32(t)},
+            caches)
+        errs.append(float(jnp.abs(lg[:, 0] - full[:, t]).max()))
+    assert max(errs) < 2e-4, (arch, max(errs))
+
+
+def test_exact_paper_configs_structural():
+    """Full (non-reduced) configs build their param STRUCTURE (eval_shape
+    only) with the exact assigned dimensions."""
+    expect = {
+        "qwen2-72b": dict(n_layers=80, d_model=8192, n_heads=64,
+                          n_kv_heads=8, d_ff=29568, vocab_size=152064),
+        "deepseek-67b": dict(n_layers=95, d_model=8192, d_ff=22016,
+                             vocab_size=102400),
+        "qwen3-4b": dict(n_layers=36, d_model=2560, qk_norm=True),
+        "llama3.2-3b": dict(n_layers=28, d_model=3072, n_heads=24),
+        "pixtral-12b": dict(n_layers=40, d_model=5120, d_ff=14336),
+        "whisper-medium": dict(n_layers=24, d_model=1024, d_ff=4096,
+                               vocab_size=51865),
+        "recurrentgemma-9b": dict(n_layers=38, d_model=4096, window=2048),
+        "granite-moe-1b-a400m": dict(n_experts=32, top_k=8, d_ff=512),
+        "dbrx-132b": dict(n_experts=16, top_k=4, d_model=6144),
+        "xlstm-1.3b": dict(n_layers=48, d_model=2048, d_ff=0),
+    }
+    for arch, fields in expect.items():
+        cfg = get_config(arch)
+        for k, v in fields.items():
+            assert getattr(cfg, k) == v, (arch, k)
+        model = build_model(cfg)
+        shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        n = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+        # within 2% of the config-level estimate
+        assert abs(n - cfg.n_params) / cfg.n_params < 0.02, (
+            arch, n, cfg.n_params)

@@ -1,0 +1,84 @@
+"""Format decode/encode vs ml_dtypes ground truth + quantization laws."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import formats as F
+from repro.core.quantize import (dequantize_blockwise, fake_quant,
+                                 quantize_blockwise)
+from repro.core.quantize import dequantize as _deq
+from repro.core.quantize import quantize as _quant
+
+SMALL = [F.FP16, F.BF16, F.FP8_E4M3, F.FP8_E5M2, F.FP4_E2M1]
+
+
+@pytest.mark.parametrize("fmt", SMALL, ids=lambda f: f.name)
+def test_decode_matches_mldtypes_exhaustive(fmt):
+    """Decode every code in the format; reconstruct and compare with the
+    ml_dtypes value (NaN/inf flags included)."""
+    codes = np.arange(1 << fmt.bits, dtype=np.uint32)
+    vals = F.codes_to_np(codes, fmt).astype(np.float64)
+    sign, mant, exp, is_zero, is_inf, is_nan = map(
+        np.asarray, F.decode(codes, fmt))
+    recon = ((-1.0) ** sign) * mant.astype(np.float64) \
+        * np.exp2(exp.astype(np.float64) - fmt.man_bits)
+    finite = ~(is_inf | is_nan)
+    assert np.array_equal(recon[finite], vals[finite]), fmt.name
+    assert np.array_equal(is_nan, np.isnan(vals)), fmt.name
+    assert np.array_equal(is_inf, np.isinf(vals)), fmt.name
+    assert np.array_equal(is_zero, (vals == 0) & ~np.isnan(vals)), fmt.name
+
+
+@pytest.mark.parametrize("fmt", SMALL, ids=lambda f: f.name)
+def test_max_finite_and_min_subnormal(fmt):
+    codes = np.arange(1 << fmt.bits, dtype=np.uint32)
+    vals = F.codes_to_np(codes, fmt).astype(np.float64)
+    finite = vals[np.isfinite(vals)]
+    assert finite.max() == fmt.max_finite
+    pos = finite[finite > 0]
+    assert pos.min() == fmt.min_subnormal
+
+
+@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=4,
+                max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_quant_dequant_error_bound(xs):
+    """|x - qdq(x)| <= scale * ulp/2 elementwise for fp8 per-tensor."""
+    x = jnp.asarray(np.array(xs, np.float32))
+    q, s = _quant(x, "fp8_e4m3")
+    err = np.abs(np.asarray(_deq(q, s)) - np.asarray(x))
+    scale = float(np.asarray(s).max())
+    # fp8e4m3 relative ulp <= 2^-3; absolute bound at the scaled max
+    bound = scale * F.FP8_E4M3.quant_target * (2.0 ** -3)
+    assert err.max() <= bound + 1e-12
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "fp4_e2m1", "fp16", "bf16"])
+def test_fake_quant_identity_shape_grad(fmt):
+    import jax
+    x = jnp.linspace(-3, 3, 32).reshape(4, 8)
+    y = fake_quant(x, fmt)
+    assert y.shape == x.shape
+    g = jax.grad(lambda t: fake_quant(t, fmt).sum())(x)
+    # STE: gradient of identity
+    assert np.allclose(np.asarray(g), 1.0)
+
+
+def test_blockwise_roundtrip():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(8, 256)),
+                    jnp.float32)
+    q, s = quantize_blockwise(x, "fp8_e4m3", axis=1, block=64)
+    y = dequantize_blockwise(q, s, axis=1, block=64)
+    rel = np.abs(np.asarray(y) - np.asarray(x)).max() / np.abs(x).max()
+    assert rel < 0.08
+
+
+def test_packing_roundtrip():
+    from repro.core import packing as P
+    rng = np.random.default_rng(1)
+    c = jnp.asarray(rng.integers(0, 16, (16, 32)), jnp.uint8)
+    assert (P.unpack_fp4(P.pack_fp4(c)) == c).all()
+    assert P.packed_nbytes(10, F.FP4_E2M1) == 5
+    assert P.packed_nbytes(10, F.FP8_E4M3) == 10

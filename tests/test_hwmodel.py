@@ -1,0 +1,114 @@
+"""The paper's headline claims must fall out of the hardware model."""
+import math
+
+import pytest
+
+from repro.hwmodel import area as A
+from repro.hwmodel import energy as E
+from repro.hwmodel import throughput as T
+from repro.hwmodel import timing as TM
+
+
+def test_shifter_mux_counts():
+    # §II-B1 closed forms
+    assert A.barrel_shifter_muxes(128) == 128 * 7
+    assert A.reconfig_extra_muxes(128) == 5 * 128 / 8 + 3 * 7 - 5
+
+
+def test_shifter_overheads_match_paper():
+    assert abs(A.reconfig_overhead(128) - 0.107) < 0.001
+    assert abs(A.reconfig_overhead(64) - 0.138) < 0.001
+    assert abs(A.multilane_overhead(128) - 0.785) < 0.005
+    assert abs(A.multilane_overhead(64) - 0.750) < 0.001
+
+
+def test_throughput_table1():
+    """Table I/II: 1/2/4/8-way modes, 2..16 GFLOP/s at 1 GHz."""
+    expect = {"fp32_fma_scalar": 2, "fp16_fma_simd": 4, "fp16_dpa_fp32": 4,
+              "fp8_fma_simd": 8, "fp8_dpa_fp32": 8, "fp4_dpa_fp32": 16}
+    for name, gf in expect.items():
+        assert T.gflops(T.MODE_BY_NAME[name]) == gf, name
+
+
+def test_dpa_throughput_gain_vs_fpnew():
+    """Abstract: 2x FP16, 4x FP8, 8x FP4 throughput via DPA."""
+    for name, gain in [("fp16_dpa_fp32", 2), ("fp8_dpa_fp32", 4),
+                       ("fp4_dpa_fp32", 8)]:
+        m = T.MODE_BY_NAME[name]
+        assert T.gflops(m) / T.gflops(m, "fpnew") == gain, name
+
+
+def test_area_efficiency_headline():
+    """Abstract: 1.46x FP16 DPA, 2.92x FP8 DPA area efficiency at the
+    mean +37.3% area cost."""
+    assert abs(A.TRANSDOT_AREA_RATIO_MEAN - 1.373) < 1e-9
+    eff16 = T.area_efficiency(T.MODE_BY_NAME["fp16_dpa_fp32"])
+    eff8 = T.area_efficiency(T.MODE_BY_NAME["fp8_dpa_fp32"])
+    assert abs(eff16 - 1.46) < 0.01
+    assert abs(eff8 - 2.92) < 0.01
+
+
+def test_area_efficiency_ranges():
+    """Fig. 7a ranges: FP16 1.28-1.52; FP8 upper 3.04 (the paper's printed
+    lower bound 1.56 is inconsistent with its own +56.8% worst-case area —
+    our model gives 2.55 = 4/1.568; see EXPERIMENTS.md §Paper-claims)."""
+    lo16, hi16 = T.area_efficiency_range(T.MODE_BY_NAME["fp16_dpa_fp32"])
+    lo8, hi8 = T.area_efficiency_range(T.MODE_BY_NAME["fp8_dpa_fp32"])
+    assert abs(lo16 - 1.28) < 0.01 and abs(hi16 - 1.52) < 0.01
+    assert abs(hi8 - 3.04) < 0.01
+    assert abs(lo8 - 2.55) < 0.01
+
+
+def test_merged_simd_saving():
+    """§III-C: merged-SIMD TransDot is -9.44% vs FPnew."""
+    assert abs(A.MERGED_SIMD_AREA_RATIO - (1 - 0.0944)) < 1e-9
+
+
+def test_table2_energy():
+    assert E.ENERGY_PJ_PER_FLOP["fp32_fma_scalar"] == 3.75
+    assert E.ENERGY_PJ_PER_FLOP["fp4_dpa_fp32"] == 0.41
+    assert abs(E.efficiency_vs_fp32("fp4_dpa_fp32") - 3.75 / 0.41) < 1e-9
+    # DPA never costs more energy than same-format SIMD
+    assert E.ENERGY_PJ_PER_FLOP["fp16_dpa_fp32"] <= \
+        E.ENERGY_PJ_PER_FLOP["fp16_fma_simd"]
+
+
+def test_fig6b_multiplier_anchors():
+    assert TM.multiplier_min_delay("transdot", pipelined=False) == 1.38
+    assert TM.multiplier_min_delay("separated", pipelined=False) == 1.50
+    td = TM.multiplier_area(1.6, "transdot", pipelined=False)
+    sep = TM.multiplier_area(1.6, "separated", pipelined=False)
+    assert abs(1 - td / sep - 0.154) < 1e-6
+    td = TM.multiplier_area(1.0, "transdot", pipelined=True)
+    sep = TM.multiplier_area(1.0, "separated", pipelined=True)
+    assert abs(1 - td / sep - 0.158) < 1e-6
+
+
+def test_fig6a_shifter_behaviour():
+    # converges to baseline above 400ps
+    for d in (420, 500, 800):
+        assert TM.shifter_area(d, "reconfig") == TM.shifter_area(d, "single")
+    # multi-lane stays 35.8%..67.2% larger
+    for d in (200, 300, 500, 800):
+        r = TM.shifter_area(d, "multilane") / TM.shifter_area(d, "single")
+        assert 1.35 <= r <= 1.68, (d, r)
+    # tight targets push reconfig toward multi-lane
+    r300 = TM.shifter_area(300, "reconfig") / TM.shifter_area(300, "single")
+    assert 1.0 < r300 < TM.shifter_area(300, "multilane") / \
+        TM.shifter_area(300, "single")
+
+
+def test_layout_and_breakdown_shares():
+    assert abs(sum(A.TRANSDOT_LAYOUT.values()) - 1.0) < 1e-9
+    assert abs(sum(A.FPNEW_BREAKDOWN.values()) - 1.0) < 1e-9
+    assert A.TRANSDOT_LAYOUT["fp4_dp2"] == 0.039      # Fig 7b: FP4 3.9%
+    assert A.FPNEW_BREAKDOWN["mantissa_multiplier"] == 0.30
+    sh = (A.FPNEW_BREAKDOWN["alignment_shifter"]
+          + A.FPNEW_BREAKDOWN["normalization_shifter"])
+    assert 0.15 <= sh <= 0.20                          # §II-B1 "15-20%"
+
+
+def test_peak_scaling_for_roofline():
+    assert T.peak_flops_scale("fp8_e4m3") == 2.0
+    assert T.peak_flops_scale("fp4_e2m1") == 4.0
+    assert T.peak_flops_scale("bf16") == 1.0

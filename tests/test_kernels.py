@@ -1,0 +1,127 @@
+"""Pallas kernel validation: shape/dtype sweeps vs the ref.py oracles
+(interpret mode on CPU — the kernel body itself executes)."""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import get_policy
+from repro.kernels import dpa_matmul as dm
+from repro.kernels import ops as O
+from repro.kernels import ref
+from repro.kernels.ops import _quant_operand
+
+FMTS = ["fp8_e4m3", "fp4_e2m1", "fp16", "bf16"]
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("mkn", [(128, 128, 128), (256, 384, 128),
+                                 (128, 512, 256)])
+def test_dpa_matmul_vs_ref(fmt, mkn):
+    M, K, N = mkn
+    k1, k2 = jax.random.split(jax.random.PRNGKey(M + K + N))
+    x = jax.random.normal(k1, (M, K), jnp.float32)
+    w = jax.random.normal(k2, (K, N), jnp.float32)
+    xq, sx = _quant_operand(x, fmt, -1)
+    wq, sw = _quant_operand(w, fmt, 0)
+    got = dm.dpa_matmul_prequant(xq, wq, sx, sw, fmt_x=fmt, fmt_w=fmt,
+                                 interpret=True)
+    want = ref.dpa_matmul_ref(xq, wq, sx, sw, fmt_x=fmt, fmt_w=fmt)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+def test_dpa_matmul_block_shapes(fmt):
+    """Block-shape sweep: result must be block-shape independent."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (256, 256), jnp.float32)
+    xq, sx = _quant_operand(x, fmt, -1)
+    wq, sw = _quant_operand(w, fmt, 0)
+    outs = []
+    for bm, bk, bn in [(128, 128, 128), (64, 256, 128), (256, 64, 64)]:
+        outs.append(np.asarray(dm.dpa_matmul_prequant(
+            xq, wq, sx, sw, fmt_x=fmt, fmt_w=fmt, bm=bm, bk=bk, bn=bn,
+            interpret=True)))
+    np.testing.assert_allclose(outs[0], outs[1], rtol=2e-5, atol=2e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("pol", ["fp8_dpa", "fp16_dpa", "fp4_dpa",
+                                 "bf16_dpa"])
+def test_dpa_matmul_policy_wrapper_padding(pol):
+    """Non-aligned shapes route through padding and stay close to f32."""
+    x = jax.random.normal(jax.random.PRNGKey(2), (100, 200), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(3), (200, 72), jnp.float32)
+    y = O.dpa_matmul(x, w, get_policy(pol))
+    want = x @ w
+    rel = float(jnp.abs(y - want).max() / jnp.abs(want).max())
+    tol = {"fp16_dpa": 0.002, "bf16_dpa": 0.02, "fp8_dpa": 0.1,
+           "fp4_dpa": 0.35}[pol]
+    assert rel < tol, (pol, rel)
+
+
+@pytest.mark.parametrize("fmt", FMTS)
+@pytest.mark.parametrize("mk", [(128, 64), (128, 1024), (256, 333)])
+def test_quantize_rows_vs_ref(fmt, mk):
+    M, K = mk
+    x = jax.random.normal(jax.random.PRNGKey(M * K), (M, K), jnp.float32) * 5
+    q, s = O.quantize_rows(x, fmt)
+    qr, sr = ref.quantize_rows_ref(x, fmt=fmt)
+    if fmt == "fp4_e2m1":
+        assert np.array_equal(np.asarray(q), np.asarray(qr))
+    else:
+        assert np.array_equal(np.asarray(q, np.float32),
+                              np.asarray(qr, np.float32))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+def test_fp4_encode_matches_mldtypes():
+    """Kernel arithmetic E2M1 encoder == ml_dtypes RNE cast."""
+    import ml_dtypes
+    from repro.kernels.quantize import _encode_fp4
+    from repro.core.formats import np_to_codes, FP4_E2M1
+    x = np.linspace(-7, 7, 4001).astype(np.float32)
+    got = np.asarray(_encode_fp4(jnp.clip(jnp.asarray(x), -6, 6)))
+    want = np_to_codes(x.astype(ml_dtypes.float4_e2m1fn), FP4_E2M1)
+    assert np.array_equal(got, want.astype(np.uint8))
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None),
+                                           (True, 64)])
+@pytest.mark.parametrize("hq,hkv", [(8, 8), (8, 2), (4, 1)])
+def test_flash_attention_vs_ref(causal, window, hq, hkv):
+    k = jax.random.PRNGKey(hq * 10 + (window or 0))
+    q = jax.random.normal(k, (2, hq, 256, 64), jnp.float32)
+    kk = jax.random.normal(jax.random.PRNGKey(1), (2, hkv, 256, 64),
+                           jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, hkv, 256, 64),
+                          jnp.float32)
+    got = O.flash_attention(q, kk, v, causal=causal, window=window)
+    want = ref.flash_attention_ref(q, kk, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_decode_shape_kv_longer():
+    """Sq < Skv (cache suffix attention during chunked prefill)."""
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 4, 128, 64),
+                          jnp.float32)
+    kk = jax.random.normal(jax.random.PRNGKey(1), (1, 4, 512, 64),
+                           jnp.float32)
+    v = jax.random.normal(jax.random.PRNGKey(2), (1, 4, 512, 64),
+                          jnp.float32)
+    got = O.flash_attention(q, kk, v, causal=True)
+    want = ref.flash_attention_ref(q, kk, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_dpa_matmul_bf16_inputs():
+    """Kernel accepts bf16 activations directly (mixed-precision train)."""
+    x = jax.random.normal(jax.random.PRNGKey(4), (128, 128), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(5), (128, 128), jnp.float32)
+    y = O.dpa_matmul(x, w, get_policy("fp8_dpa"))
+    assert y.dtype == jnp.bfloat16 and bool(jnp.isfinite(
+        y.astype(jnp.float32)).all())
