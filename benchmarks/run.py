@@ -1,15 +1,30 @@
 """Benchmark driver: one function per paper table/figure + software
-benches.  Prints ``name,us_per_call,derived`` CSV."""
+benches.  Prints ``name,us_per_call,derived`` CSV.
+
+Flags: --paper-only (skip software benches), --smoke (CI gate: the fast
+software subset only — policy dots + the packed/fused operand-bandwidth
+pipeline; no paper figures, no e2e train/decode steps).
+"""
 from __future__ import annotations
 
+import os
 import sys
+
+# allow `python benchmarks/run.py` from anywhere: the repo root (for the
+# `benchmarks` package) and src/ (for `repro`) both go on sys.path
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
 
 
 def main() -> None:
     from benchmarks import paper_tables, software_bench
-    suites = list(paper_tables.ALL)
-    if "--paper-only" not in sys.argv:
-        suites += list(software_bench.ALL)
+    if "--smoke" in sys.argv:
+        suites = list(software_bench.SMOKE)
+    else:
+        suites = list(paper_tables.ALL)
+        if "--paper-only" not in sys.argv:
+            suites += list(software_bench.ALL)
     print("name,us_per_call,derived")
     failures = []
     for fn in suites:

@@ -46,6 +46,35 @@ def dpa_dot_policies():
     return rows
 
 
+def packed_pipeline():
+    """The quantize->pack->DPA operand-bandwidth story (paper Table I).
+
+    Reports, per operand format, the bytes an (M,K)x(K,N) matmul moves
+    through the fixed-width interface (quantized operands + scales) and
+    the reduction vs f32 — expected 2x/4x/8x for fp16/fp8/packed-fp4 —
+    plus interpret-mode wall-times for the packed and fused kernel paths
+    (relative signals; the bytes are the modeled TPU quantity)."""
+    from repro.core.packing import matmul_operand_bytes
+    from repro.kernels import ops as O
+    rows = []
+    M, K, N = 256, 512, 256
+    x = jax.random.normal(jax.random.PRNGKey(0), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N), jnp.float32)
+    for pol in ("fp16_dpa", "fp8_dpa", "fp4_dpa_packed"):
+        b = matmul_operand_bytes(M, K, N, pol)
+        rows.append((f"sw/operand_bytes_{pol}", float(b["total"]),
+                     f"reduction_vs_f32={b['reduction_vs_f32']:.2f}x"))
+    for pol in ("fp4_dpa_packed", "fp4_dpa_fused", "fp8_dpa_fused"):
+        us = _time(lambda pol=pol: O.dpa_matmul(x, w, get_policy(pol)),
+                   reps=2)
+        rows.append((f"sw/pallas_dpa_matmul_{pol}_interpret", us,
+                     "packed/fused kernel path"))
+    us = _time(lambda: O.quantize_rows(x, "fp4_e2m1", pack=True), reps=2)
+    rows.append(("sw/pallas_quantize_pack_rows_interpret", us,
+                 "fused absmax+cast+nibble-pack"))
+    return rows
+
+
 def pallas_kernels():
     rows = []
     from repro.kernels import ops as O
@@ -110,4 +139,6 @@ def e2e_decode_step():
     return rows
 
 
-ALL = [dpa_dot_policies, pallas_kernels, e2e_train_step, e2e_decode_step]
+ALL = [dpa_dot_policies, packed_pipeline, pallas_kernels, e2e_train_step,
+       e2e_decode_step]
+SMOKE = [dpa_dot_policies, packed_pipeline]

@@ -9,8 +9,10 @@ Three execution paths, selected by the policy:
                 This is the *training* path — numerics match the hardware
                 contract (operands carry format precision, accumulation is
                 wide) while gradients flow.
-  kernel      : Pallas `dpa_matmul` on pre-quantized operands (serving /
-                TPU path; interpret-mode on CPU).
+  kernel      : Pallas `dpa_matmul` (serving / TPU path; interpret-mode on
+                CPU).  The policy's `packed` / `fused_quant` bits select
+                the packed-fp4 operand layout and the fused in-kernel
+                quantize prologue (see `repro.kernels.ops.dpa_matmul`).
 
 Parameters are plain pytrees ({"w": ..., "b": ...}); the module system in
 `repro.models` composes these functions.
@@ -37,7 +39,11 @@ def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
     return params
 
 
-_NATIVE_NARROW = ("float8_e4m3fn", "float8_e5m2", "float4_e2m1fn")
+# jnp dtypes whose arrays are accepted *as-is* as pre-quantized weights.
+# (float4 only exists on newer JAX builds; on 0.4.x fp4 weights are uint8
+# codes and ride the kernel path instead.)
+NATIVE_NARROW = ("float8_e4m3fn", "float8_e5m2", "float4_e2m1fn")
+_NATIVE_NARROW = NATIVE_NARROW
 
 
 def dpa_dot(x, w, policy: TransPrecisionPolicy):
@@ -74,6 +80,15 @@ def dpa_dot(x, w, policy: TransPrecisionPolicy):
 def apply_linear(params, x, policy: TransPrecisionPolicy = None):
     policy = get_policy(policy or "fp32")
     w = params["w"]
+    if w.dtype == jnp.uint8:
+        # fp4 E2M1 *code* weights (the storage dtype on JAX builds without
+        # native float4).  Casting codes 0..15 to floats would silently
+        # produce garbage — code-weight serving needs the kernel path with
+        # explicit scales, which plain params don't carry.
+        raise TypeError(
+            "apply_linear got uint8 code weights; store fp4 weights as "
+            "floats (fake-quant / kernel policies quantize them) or drive "
+            "repro.kernels.ops.dpa_matmul with explicit scales")
     if str(w.dtype) not in _NATIVE_NARROW:
         w = w.astype(x.dtype)
     y = dpa_dot(x, w, policy)

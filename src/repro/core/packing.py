@@ -32,11 +32,72 @@ def unpack_fp4(packed):
     return out.reshape(p.shape[:-1] + (p.shape[-1] * 2,))
 
 
+def pack_fp4_axis(codes, axis: int):
+    """Pack two E2M1 codes per byte along an arbitrary axis.
+
+    The kernel operand layout: activations pack along their K axis (-1),
+    weights along theirs (0), so the matmul BlockSpec moves half the bytes
+    and `kernels.dpa_matmul` unpacks nibbles in VMEM."""
+    c = jnp.asarray(codes)
+    axis = axis % c.ndim
+    if axis == c.ndim - 1:
+        return pack_fp4(c)
+    return jnp.moveaxis(pack_fp4(jnp.moveaxis(c, axis, -1)), -1, axis)
+
+
+def unpack_fp4_axis(packed, axis: int):
+    p = jnp.asarray(packed)
+    axis = axis % p.ndim
+    if axis == p.ndim - 1:
+        return unpack_fp4(p)
+    return jnp.moveaxis(unpack_fp4(jnp.moveaxis(p, axis, -1)), -1, axis)
+
+
 def packed_nbytes(n_elems: int, fmt: FloatFormat) -> int:
     fmt = get_format(fmt)
     if fmt is FP4_E2M1 or fmt.bits == 4:
         return (n_elems + 1) // 2
     return n_elems * ((fmt.bits + 7) // 8)
+
+
+def operand_nbytes(n_elems: int, fmt: FloatFormat, *, packed: bool = True) -> int:
+    """Bytes one operand tensor moves through the fixed-width interface.
+
+    `packed=True` is the TransDot I/O contract (format-width wires: fp4 at
+    half a byte per code); `packed=False` is the byte-per-code layout an
+    unpacked fp4 operand burns (ml_dtypes container width).  This is the
+    quantity the paper's Table I bandwidth story — and our bytes-moved
+    benchmark — is about: fp16/fp8/packed-fp4 move 2x/4x/8x fewer operand
+    bytes than fp32."""
+    fmt = get_format(fmt)
+    if fmt.bits == 4 and not packed:
+        return n_elems
+    return packed_nbytes(n_elems, fmt)
+
+
+def matmul_operand_bytes(M: int, K: int, N: int, policy) -> dict:
+    """Operand-interface bytes for an (M,K)x(K,N) DPA matmul under `policy`
+    (quantized operands + their f32 scales), with the f32 baseline and the
+    reduction ratio.  Scale vectors use the kernel layout: (M,1) row scales
+    and (1,N) column scales.
+
+    fused_quant policies are accounted honestly: their activations traverse
+    HBM *raw* (quantization happens in VMEM, scales never leave the chip),
+    so the x side is full-width input bytes and only the weight side earns
+    a format-width reduction."""
+    from .policy import get_policy
+    policy = get_policy(policy)
+    if policy.fused_quant:
+        x_bytes = 4 * M * K
+    else:
+        x_bytes = operand_nbytes(M * K, policy.fmt_acts,
+                                 packed=policy.packed) + 4 * M
+    w_bytes = operand_nbytes(K * N, policy.fmt_weights,
+                             packed=policy.packed) + 4 * N
+    f32 = 4 * (M * K + K * N)
+    total = x_bytes + w_bytes
+    return {"x_bytes": x_bytes, "w_bytes": w_bytes, "total": total,
+            "f32_total": f32, "reduction_vs_f32": f32 / total}
 
 
 def pack_codes(codes, fmt: FloatFormat):

@@ -27,6 +27,12 @@ class TransPrecisionPolicy:
     granularities: "per_tensor" | "per_channel" | "per_block".
     use_kernel: route through the Pallas dpa_matmul kernel when shapes
     allow (TPU target; interpret-mode on CPU).
+    packed: move fp4 operand sides as packed bytes (2 E2M1 codes/byte)
+    through the kernel BlockSpec — the paper's format-width I/O contract,
+    halving fp4 operand bytes HBM->VMEM.  Bit-identical to unpacked.
+    fused_quant: quantize activations *inside* the matmul kernel prologue
+    (per-(row, K-block) absmax scales folded into the accumulation) instead
+    of a separate XLA pass — no quantized-activation HBM round-trip.
     """
     fmt_weights: str = "fp32"
     fmt_acts: str = "fp32"
@@ -35,11 +41,22 @@ class TransPrecisionPolicy:
     a_granularity: str = "per_tensor"
     block_size: int = 128
     use_kernel: bool = False
+    packed: bool = False
+    fused_quant: bool = False
 
     def __post_init__(self):
         get_format(self.fmt_weights), get_format(self.fmt_acts)
         if get_format(self.accum).name not in ("fp32", "fp16"):
             raise ValueError("TransDot accumulates into FP32 or FP16")
+        if self.fused_quant and not self.use_kernel:
+            raise ValueError("fused_quant is a kernel-path feature; set "
+                             "use_kernel=True")
+        if self.packed and not self.use_kernel:
+            raise ValueError("packed operand movement is a kernel-path "
+                             "feature; set use_kernel=True")
+        if self.packed and not (get_format(self.fmt_weights).bits == 4
+                                or get_format(self.fmt_acts).bits == 4):
+            raise ValueError("packed storage needs a 4-bit operand format")
 
     @property
     def enabled(self) -> bool:
@@ -65,6 +82,18 @@ POLICIES = {
     # weight-only variants (serving: weights ride the narrow wires)
     "w8a16": TransPrecisionPolicy("fp8_e4m3", "fp16"),
     "w4a8": TransPrecisionPolicy("fp4_e2m1", "fp8_e4m3"),
+    # kernel-path serving modes: packed fp4 operand bytes and/or in-kernel
+    # activation quantization (the fused quantize->pack->DPA pipeline)
+    "fp8_dpa_fused": TransPrecisionPolicy("fp8_e4m3", "fp8_e4m3",
+                                          use_kernel=True, fused_quant=True),
+    "fp4_dpa_packed": TransPrecisionPolicy("fp4_e2m1", "fp4_e2m1",
+                                           use_kernel=True, packed=True),
+    "fp4_dpa_fused": TransPrecisionPolicy("fp4_e2m1", "fp4_e2m1",
+                                          use_kernel=True, packed=True,
+                                          fused_quant=True),
+    "w4a8_packed": TransPrecisionPolicy("fp4_e2m1", "fp8_e4m3",
+                                        use_kernel=True, packed=True,
+                                        fused_quant=True),
 }
 
 

@@ -15,22 +15,95 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import ml_dtypes
 
 from .formats import FloatFormat, get_format
 
-# FloatFormat -> native jnp storage dtype
+
+def _probe_dtype(dt):
+    """Return dt if this JAX build can actually compute with it, else None
+    (jax 0.4.x predates native float4 support; ml_dtypes has the dtype but
+    jnp refuses it as an array dtype)."""
+    if dt is None:
+        return None
+    try:
+        jnp.zeros((1,), dt)
+        return dt
+    except (TypeError, ValueError):
+        return None
+
+
+_FP4_NATIVE = _probe_dtype(getattr(jnp, "float4_e2m1fn", None)) \
+    or _probe_dtype(getattr(ml_dtypes, "float4_e2m1fn", None))
+
+# FloatFormat -> native jnp storage dtype (None: emulated via uint8 codes)
 _JNP_DTYPE = {
     "fp32": jnp.float32,
     "fp16": jnp.float16,
     "bf16": jnp.bfloat16,
     "fp8_e4m3": jnp.float8_e4m3fn,
     "fp8_e5m2": jnp.float8_e5m2,
-    "fp4_e2m1": jnp.float4_e2m1fn,
+    "fp4_e2m1": _FP4_NATIVE,
 }
 
 
+def has_native_dtype(fmt) -> bool:
+    return _JNP_DTYPE[get_format(fmt).name] is not None
+
+
 def jnp_dtype(fmt) -> jnp.dtype:
-    return _JNP_DTYPE[get_format(fmt).name]
+    """Storage dtype for fmt.  Emulated sub-byte formats (fp4 on JAX builds
+    without float4) store one E2M1 code per uint8 byte — the same container
+    ml_dtypes uses — so shape/byte accounting stays identical."""
+    dt = _JNP_DTYPE[get_format(fmt).name]
+    return jnp.dtype(dt) if dt is not None else jnp.dtype(jnp.uint8)
+
+
+# -----------------------------------------------------------------------------
+# FP4-E2M1 arithmetic encode/decode (TPU-friendly: no gathers, pure jnp,
+# usable inside Pallas kernels).  Shared by the quantizers, the matmul
+# kernels, and the emulated cast path below.
+# -----------------------------------------------------------------------------
+
+def encode_fp4(x):
+    """f32 values (pre-clipped to [-6, 6]) -> uint8 E2M1 codes, RNE.
+
+    The representable magnitudes are 0, .5, 1, 1.5, 2, 3, 4, 6; rounding is
+    via midpoint thresholds with ties-to-even baked into the <=/< choices."""
+    s = (x < 0).astype(jnp.uint8)
+    a = jnp.abs(x)
+    code = jnp.zeros(x.shape, jnp.uint8)
+    mags = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    for i in range(1, 8):
+        mid = 0.5 * (mags[i - 1] + mags[i])
+        even_low = (i - 1) % 2 == 0
+        take = (a > mid) if even_low else (a >= mid)
+        code = jnp.where(take, jnp.uint8(i), code)
+    return code | (s << 3)
+
+
+def decode_fp4(codes):
+    """uint8 E2M1 codes -> exact f32 values.
+
+    value = (-1)^s * (e==0 ? m/2 : (1+m/2) * 2^(e-1)) — arithmetic decode,
+    no lookup table."""
+    c = codes.astype(jnp.int32)
+    s = (c >> 3) & 1
+    e = (c >> 1) & 3
+    m = (c & 1).astype(jnp.float32)
+    mag = jnp.where(e == 0, 0.5 * m,
+                    (1.0 + 0.5 * m) * jnp.exp2((e - 1).astype(jnp.float32)))
+    return jnp.where(s == 1, -mag, mag)
+
+
+def absmax_block_scale(xb, target: float, *, axis=1):
+    """The kernels' VMEM scale recipe: absmax/target with the eps and
+    f32-normal floors — `compute_scale` restated for a resident block with
+    a static Python-float target (Pallas-safe, shared by the quantize and
+    fused-matmul kernels and their references so their bit contract cannot
+    drift)."""
+    amax = jnp.max(jnp.abs(xb), axis=axis, keepdims=True)
+    return jnp.maximum(jnp.maximum(amax, 1e-30) / target, 2.0 ** -126)
 
 
 def compute_scale(x, fmt, *, axis=None, keepdims=True, eps=1e-30):
@@ -45,11 +118,19 @@ def compute_scale(x, fmt, *, axis=None, keepdims=True, eps=1e-30):
 
 
 def cast_to(x, fmt):
-    """Saturating RNE cast into fmt's native dtype (no scaling)."""
+    """Saturating RNE cast into fmt's native dtype (no scaling).
+
+    When the format has no native dtype in this JAX build (fp4 on 0.4.x)
+    the cast is emulated: values are RNE-rounded onto the E2M1 grid and
+    returned as f32 — bit-identical values, wide container.  Use
+    `encode_fp4` directly when the uint8 code representation is wanted."""
     fmt = get_format(fmt)
     xf = x.astype(jnp.float32)
     xf = jnp.clip(xf, -fmt.max_finite, fmt.max_finite)
-    return xf.astype(jnp_dtype(fmt))
+    dt = _JNP_DTYPE[fmt.name]
+    if dt is None:
+        return decode_fp4(encode_fp4(xf))
+    return xf.astype(dt)
 
 
 def quantize(x, fmt, *, axis=None):

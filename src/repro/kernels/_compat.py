@@ -1,0 +1,12 @@
+"""JAX version compatibility for the Pallas kernels.
+
+jax 0.4.x names the TPU compiler-params dataclass ``TPUCompilerParams``;
+0.5+ renamed it to ``CompilerParams``.  Import from here so every kernel
+module tracks the rename in one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -1,23 +1,34 @@
-"""Pallas TPU kernel: trans-precision DPA matmul.
+"""Pallas TPU kernels: trans-precision DPA matmul (packed + fused).
 
 TPU adaptation of the TransDot datapath (DESIGN.md §2): the MXU is a
 128x128 fp32-accumulating systolic dot-product engine — i.e. a very wide
 DPA unit.  The paper's N-term DPA (narrow operands in, one wide
 accumulation out) maps onto:
 
-  HBM -> VMEM   : operands move at format width (fp8 = 1 byte, fp4 = one
-                  uint8 code here / packed nibbles in storage) — the
-                  "fixed-width FPU interface" of the paper becomes HBM
-                  bandwidth actually saved.
-  VMEM decode   : per-block dequant-free *widening* of operand codes into
-                  MXU-ingestible values (the multi-mode multiplier's
-                  operand partitioning).
+  HBM -> VMEM   : operands move at *format width* — fp16 two bytes, fp8
+                  one byte, fp4 two E2M1 codes per byte (`pack_x`/`pack_w`
+                  halve the uint8 bytes the BlockSpec moves).  The paper's
+                  "fixed-width FPU interface" becomes HBM bandwidth
+                  actually saved: 2x/4x/8x fewer operand bytes than f32.
+  VMEM decode   : in-kernel nibble unpack + dequant-free *widening* of
+                  operand codes into MXU-ingestible values (the multi-mode
+                  multiplier's operand partitioning).
   MXU + scratch : fp32 accumulation across the K grid dimension (the
                   paper's wide adder + the extra DPA pipeline stage: the
                   accumulator lives across K iterations).
   epilogue      : per-channel scales applied at the final K step (the
                   exponent datapath's contribution, hoisted to software
                   scales as in all block-scaled AI formats).
+
+Two entry points:
+
+  dpa_matmul_prequant : both operands already quantized (and optionally
+                        packed); row/column scales applied in the epilogue.
+  dpa_matmul_fused    : raw f32/bf16 activations quantized *inside* the
+                        kernel prologue — per-(row, K-block) absmax scales
+                        folded into the accumulation, weight column scales
+                        in the epilogue.  No separate XLA quantize pass, no
+                        quantized-activation round-trip through HBM.
 
 Block shapes default to MXU-aligned (128 multiples).  Validated on CPU
 via interpret=True against `ref.py`; compiled path targets TPU.
@@ -31,30 +42,45 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.formats import get_format
+from repro.core.packing import unpack_fp4_axis
+from repro.core.quantize import (absmax_block_scale, decode_fp4, encode_fp4,
+                                 jnp_dtype)
+from repro.kernels._compat import CompilerParams as _CompilerParams
 
-def _widen(x, fmt_name: str):
-    """Operand codes/values -> f32 products domain (the multiplier input)."""
+
+def _mm_params():
+    return _CompilerParams(
+        dimension_semantics=("parallel", "parallel", "arbitrary"))
+
+
+def _widen(x, fmt_name: str, *, packed: bool = False, axis: int = 0):
+    """Operand codes/values -> f32 products domain (the multiplier input).
+
+    For fp4 the input is uint8 E2M1 codes — one per byte, or two per byte
+    when `packed` (unpacked along `axis`, the K dimension of the block,
+    with `core.packing`'s low-nibble-even layout — the helpers are pure
+    jnp so they run inside the kernel)."""
     if fmt_name == "fp4_e2m1":
-        # arithmetic E2M1 decode of uint8 codes (TPU-friendly, no gather):
-        # value = (-1)^s * (e==0 ? m/2 : (1+m/2) * 2^(e-1))
-        c = x.astype(jnp.int32)
-        s = (c >> 3) & 1
-        e = (c >> 1) & 3
-        m = (c & 1).astype(jnp.float32)
-        mag = jnp.where(e == 0, 0.5 * m,
-                        (1.0 + 0.5 * m) * jnp.exp2((e - 1).astype(jnp.float32)))
-        return jnp.where(s == 1, -mag, mag)
+        if packed:
+            x = unpack_fp4_axis(x, axis)
+        return decode_fp4(x)
     return x.astype(jnp.float32)
 
 
+# -----------------------------------------------------------------------------
+# pre-quantized operands (optionally packed)
+# -----------------------------------------------------------------------------
+
 def _dpa_matmul_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *,
-                       n_k: int, fmt_x: str, fmt_w: str):
+                       n_k: int, fmt_x: str, fmt_w: str, pack_x: bool,
+                       pack_w: bool):
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    x = _widen(x_ref[...], fmt_x)
-    w = _widen(w_ref[...], fmt_w)
+    x = _widen(x_ref[...], fmt_x, packed=pack_x, axis=1)
+    w = _widen(w_ref[...], fmt_w, packed=pack_w, axis=0)
     acc_ref[...] += jnp.dot(x, w, preferred_element_type=jnp.float32)
 
     @pl.when(pl.program_id(2) == n_k - 1)
@@ -64,40 +90,136 @@ def _dpa_matmul_kernel(x_ref, w_ref, sx_ref, sw_ref, o_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=("fmt_x", "fmt_w", "bm", "bk",
-                                             "bn", "interpret"))
+                                             "bn", "pack_x", "pack_w",
+                                             "interpret"))
 def dpa_matmul_prequant(xq, wq, sx, sw, *, fmt_x: str, fmt_w: str,
                         bm: int = 128, bk: int = 128, bn: int = 128,
+                        pack_x: bool = False, pack_w: bool = False,
                         interpret: bool = True):
     """(M,K) x (K,N) -> (M,N) f32 with fp32 accumulation.
 
     xq: quantized operand (native fp8/fp16/bf16 dtype, or uint8 E2M1 codes
-        when fmt_x == "fp4_e2m1");  sx: (M,1) or (1,1) row scales.
-    wq: same on the (K,N) side;     sw: (1,N) or (1,1) column scales.
+        when fmt_x == "fp4_e2m1"; shape (M, K//2) packed bytes when
+        `pack_x`);                 sx: (M,1) or (1,1) row scales.
+    wq: same on the (K,N) side ((K//2, N) when `pack_w`);
+                                   sw: (1,N) or (1,1) column scales.
+
+    Packing halves the bytes the x/w BlockSpecs move HBM->VMEM; the kernel
+    unpacks nibbles in VMEM before widening, so the packed path is
+    bit-identical to the unpacked one.
     """
-    M, K = xq.shape
-    K2, N = wq.shape
-    assert K == K2, (xq.shape, wq.shape)
+    assert not (pack_x and fmt_x != "fp4_e2m1"), "pack_x needs fp4 codes"
+    assert not (pack_w and fmt_w != "fp4_e2m1"), "pack_w needs fp4 codes"
+    M = xq.shape[0]
+    K = xq.shape[1] * (2 if pack_x else 1)
+    K2 = wq.shape[0] * (2 if pack_w else 1)
+    N = wq.shape[1]
+    assert K == K2, (xq.shape, wq.shape, pack_x, pack_w)
     assert M % bm == 0 and K % bk == 0 and N % bn == 0, \
         f"shapes ({M},{K},{N}) must be multiples of blocks ({bm},{bk},{bn})"
+    assert bk % 2 == 0 or not (pack_x or pack_w), "packed bk must be even"
     sx = jnp.broadcast_to(sx.astype(jnp.float32), (M, 1))
     sw = jnp.broadcast_to(sw.astype(jnp.float32), (1, N))
     n_k = K // bk
+    bk_x = bk // 2 if pack_x else bk
+    bk_w = bk // 2 if pack_w else bk
 
-    kernel = functools.partial(_dpa_matmul_kernel, n_k=n_k,
-                               fmt_x=fmt_x, fmt_w=fmt_w)
+    kernel = functools.partial(_dpa_matmul_kernel, n_k=n_k, fmt_x=fmt_x,
+                               fmt_w=fmt_w, pack_x=pack_x, pack_w=pack_w)
     return pl.pallas_call(
         kernel,
         grid=(M // bm, N // bn, n_k),
         in_specs=[
-            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
-            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bm, bk_x), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_w, bn), lambda i, j, k: (k, j)),
             pl.BlockSpec((bm, 1), lambda i, j, k: (i, 0)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        compiler_params=_mm_params(),
         interpret=interpret,
     )(xq, wq, sx, sw)
+
+
+# -----------------------------------------------------------------------------
+# fused quantize -> matmul (activations quantized in the kernel prologue)
+# -----------------------------------------------------------------------------
+
+def _quantize_block(xb, fmt: str, target: float):
+    """(bm, bk) f32 -> (values-on-the-format-grid f32, (bm,1) f32 scale).
+
+    Per-(row, K-block) absmax scaling — the same recipe as
+    `core.quantize.quantize_blockwise` with block == bk, computed in VMEM."""
+    scale = absmax_block_scale(xb, target)
+    y = jnp.clip(xb / scale, -target, target)
+    if fmt == "fp4_e2m1":
+        q = decode_fp4(encode_fp4(y))
+    else:
+        q = y.astype(jnp_dtype(fmt)).astype(jnp.float32)
+    return q, scale
+
+
+def _dpa_fused_kernel(x_ref, w_ref, sw_ref, o_ref, acc_ref, *, n_k: int,
+                      fmt_x: str, fmt_w: str, pack_w: bool, target: float):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # prologue: absmax -> scale -> saturating RNE cast, all in VMEM.  The
+    # scale varies per K block, so it is folded into this block's partial
+    # product here; only the K-invariant weight scales wait for the epilogue.
+    xq, sx = _quantize_block(x_ref[...].astype(jnp.float32), fmt_x, target)
+    w = _widen(w_ref[...], fmt_w, packed=pack_w, axis=0)
+    acc_ref[...] += jnp.dot(xq, w, preferred_element_type=jnp.float32) * sx
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...] * sw_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("fmt_x", "fmt_w", "bm", "bk",
+                                             "bn", "pack_w", "interpret"))
+def dpa_matmul_fused(x, wq, sw, *, fmt_x: str, fmt_w: str, bm: int = 128,
+                     bk: int = 128, bn: int = 128, pack_w: bool = False,
+                     interpret: bool = True):
+    """Fused quantize->matmul: raw x (M,K) f32/bf16, pre-quantized (and
+    optionally packed) weights -> (M,N) f32.
+
+    The activation tensor never round-trips through HBM in quantized form:
+    each (bm, bk) block is absmax-scaled and cast in the kernel prologue,
+    its per-(row, K-block) scale folded into the partial-product
+    accumulation, and the (1, bn) weight column scales applied in the
+    epilogue.  Numerics follow `quantize_blockwise(x, fmt, axis=-1,
+    block=bk)` — *finer*-grained than the per-row unfused path.
+    """
+    assert not (pack_w and fmt_w != "fp4_e2m1"), "pack_w needs fp4 codes"
+    M, K = x.shape
+    K2 = wq.shape[0] * (2 if pack_w else 1)
+    N = wq.shape[1]
+    assert K == K2, (x.shape, wq.shape, pack_w)
+    assert M % bm == 0 and K % bk == 0 and N % bn == 0, \
+        f"shapes ({M},{K},{N}) must be multiples of blocks ({bm},{bk},{bn})"
+    assert bk % 2 == 0 or not pack_w, "packed bk must be even"
+    sw = jnp.broadcast_to(sw.astype(jnp.float32), (1, N))
+    n_k = K // bk
+    bk_w = bk // 2 if pack_w else bk
+
+    kernel = functools.partial(
+        _dpa_fused_kernel, n_k=n_k, fmt_x=fmt_x, fmt_w=fmt_w, pack_w=pack_w,
+        target=get_format(fmt_x).quant_target)
+    return pl.pallas_call(
+        kernel,
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_w, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=_mm_params(),
+        interpret=interpret,
+    )(x, wq, sw)

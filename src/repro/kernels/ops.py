@@ -11,6 +11,7 @@ import os
 
 import jax.numpy as jnp
 
+from repro.core.packing import pack_fp4_axis
 from repro.core.policy import TransPrecisionPolicy, get_policy
 from repro.core.quantize import compute_scale, cast_to
 from repro.kernels import dpa_matmul as _dm
@@ -32,36 +33,66 @@ def _pad_to(x, mult, axis):
 def _quant_operand(x, fmt: str, axis_scale):
     """-> (codes/native, scale) with scale reduced over `axis_scale`."""
     if fmt == "fp4_e2m1":
-        from repro.kernels.quantize import _encode_fp4
         from repro.core.formats import get_format
+        from repro.core.quantize import encode_fp4
         f = get_format(fmt)
         scale = compute_scale(x, f, axis=axis_scale)
-        q = _encode_fp4(jnp.clip(x.astype(jnp.float32) / scale,
-                                 -f.max_finite, f.max_finite))
+        q = encode_fp4(jnp.clip(x.astype(jnp.float32) / scale,
+                                -f.max_finite, f.max_finite))
         return q, scale
     scale = compute_scale(x, fmt, axis=axis_scale)
     return cast_to(x.astype(jnp.float32) / scale, fmt), scale
 
 
 def dpa_matmul(x, w, policy: TransPrecisionPolicy, *, bm=128, bk=128, bn=128):
-    """Policy-driven trans-precision matmul: x (..., K) @ w (K, N)."""
+    """Policy-driven trans-precision matmul: x (..., K) @ w (K, N).
+
+    Three kernel pipelines, selected by the policy's mode bits:
+
+      default            : XLA quantize pass on both sides, prequant kernel.
+      policy.packed      : fp4 operand sides additionally packed 2 codes/
+                           byte before dispatch — the BlockSpec moves half
+                           the bytes; bit-identical results.
+      policy.fused_quant : activations enter the kernel raw; quantization
+                           happens in the kernel prologue with per-(row,
+                           K-block) scales (weights stay pre-quantized /
+                           packed — the serving layout).
+    """
     policy = get_policy(policy)
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[-1]
     x2 = x.reshape(-1, K)
-    xq, sx = _quant_operand(x2, policy.fmt_acts, axis_scale=-1)
-    wq, sw = _quant_operand(w, policy.fmt_weights, axis_scale=0)
     bm_ = min(bm, max(8, x2.shape[0]))
-    xq, pm = _pad_to(xq, bm_, 0)
-    sxp, _ = _pad_to(sx, bm_, 0)
-    xq, pk = _pad_to(xq, bk, 1)
+    pack_w = policy.packed and policy.fmt_weights == "fp4_e2m1"
+    pack_x = (policy.packed and not policy.fused_quant
+              and policy.fmt_acts == "fp4_e2m1")
+
+    wq, sw = _quant_operand(w, policy.fmt_weights, axis_scale=0)
     wq, _ = _pad_to(wq, bk, 0)
     wq, pn = _pad_to(wq, bn, 1)
     swp, _ = _pad_to(sw, bn, 1)
-    out = _dm.dpa_matmul_prequant(
-        xq, wq, sxp, swp, fmt_x=policy.fmt_acts, fmt_w=policy.fmt_weights,
-        bm=bm_, bk=bk, bn=bn, interpret=INTERPRET)
+    if pack_w:
+        wq = pack_fp4_axis(wq, 0)
+
+    if policy.fused_quant:
+        # x ships at its native width (f32/bf16); the kernel widens in VMEM
+        x2p, pm = _pad_to(x2, bm_, 0)
+        x2p, _ = _pad_to(x2p, bk, 1)
+        out = _dm.dpa_matmul_fused(
+            x2p, wq, swp, fmt_x=policy.fmt_acts, fmt_w=policy.fmt_weights,
+            bm=bm_, bk=bk, bn=bn, pack_w=pack_w, interpret=INTERPRET)
+    else:
+        xq, sx = _quant_operand(x2, policy.fmt_acts, axis_scale=-1)
+        xq, pm = _pad_to(xq, bm_, 0)
+        sxp, _ = _pad_to(sx, bm_, 0)
+        xq, _ = _pad_to(xq, bk, 1)
+        if pack_x:
+            xq = pack_fp4_axis(xq, 1)
+        out = _dm.dpa_matmul_prequant(
+            xq, wq, sxp, swp, fmt_x=policy.fmt_acts,
+            fmt_w=policy.fmt_weights, bm=bm_, bk=bk, bn=bn,
+            pack_x=pack_x, pack_w=pack_w, interpret=INTERPRET)
     if pm:
         out = out[: x2.shape[0]]
     if pn:
@@ -69,10 +100,16 @@ def dpa_matmul(x, w, policy: TransPrecisionPolicy, *, bm=128, bk=128, bn=128):
     return out.reshape(*lead, N).astype(x.dtype)
 
 
-def quantize_rows(x, fmt: str, *, bm=128):
-    """Fused absmax+cast row quantization (2D input)."""
+def quantize_rows(x, fmt: str, *, bm=128, pack: bool = False):
+    """Fused absmax+cast row quantization (2D input).  With `pack` (fp4
+    only) the kernel also nibble-packs: (M, K//2) uint8 out — the
+    quantize->pack half of the quantize->pack->DPA pipeline."""
     x2, pm = _pad_to(x, bm, 0)
-    q, s = _q.quantize_rows(x2, fmt=fmt, bm=bm, interpret=INTERPRET)
+    if pack:
+        assert fmt == "fp4_e2m1", "pack=True is the fp4 pipeline"
+        q, s = _q.quantize_pack_rows(x2, bm=bm, interpret=INTERPRET)
+    else:
+        q, s = _q.quantize_rows(x2, fmt=fmt, bm=bm, interpret=INTERPRET)
     if pm:
         q, s = q[: x.shape[0]], s[: x.shape[0]]
     return q, s

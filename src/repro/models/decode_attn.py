@@ -78,12 +78,22 @@ def flash_decode(q, k_new, v_new, k_cache, v_cache, offset, mesh,
     else under auto SPMD."""
     axis = "model"
     body = partial(_flash_decode_body, axis_name=axis, scale=scale)
-    fn = jax.shard_map(
-        body, mesh=mesh,
-        in_specs=(P(), P(), P(), P(None, axis, None, None),
-                  P(None, axis, None, None), P()),
-        out_specs=(P(), P(None, axis, None, None),
-                   P(None, axis, None, None)),
-        axis_names={axis}, check_vma=False)
+    in_specs = (P(), P(), P(), P(None, axis, None, None),
+                P(None, axis, None, None), P())
+    out_specs = (P(), P(None, axis, None, None),
+                 P(None, axis, None, None))
+    if hasattr(jax, "shard_map"):
+        fn = jax.shard_map(body, mesh=mesh, in_specs=in_specs,
+                           out_specs=out_specs, axis_names={axis},
+                           check_vma=False)
+    else:   # jax 0.4.x: the experimental API, check_rep instead of vma.
+            # No auto= for the other mesh axes: partial-manual shard_map
+            # on 0.4.x lowers to a PartitionId op XLA's SPMD partitioner
+            # rejects ("PartitionId instruction is not supported").  All-
+            # manual with replicated P() specs is numerically equivalent
+            # here (test_flash_decode_sharded_matches_train pins it).
+        from jax.experimental.shard_map import shard_map as _shard_map
+        fn = _shard_map(body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
     return fn(q, k_new, v_new, k_cache, v_cache,
               jnp.asarray(offset, jnp.int32))

@@ -13,7 +13,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear import apply_linear, init_linear
+from repro.core.linear import NATIVE_NARROW, apply_linear, init_linear
 from repro.core.policy import get_policy
 from repro.distributed.sharding import maybe_shard
 
@@ -321,7 +321,7 @@ def apply_moe(params, x, cfg):
 
     def expert_mm(name, z):
         w = params[name]["w"]
-        if str(w.dtype) in ("float8_e4m3fn", "float8_e5m2", "float4_e2m1fn"):
+        if str(w.dtype) in NATIVE_NARROW:
             from repro.core.quantize import cast_to, compute_scale
             sz = compute_scale(z, policy.fmt_acts, axis=-1)
             zq = cast_to(z.astype(jnp.float32) / sz, policy.fmt_acts)

@@ -1,0 +1,87 @@
+"""Generate tests/golden/dpa_vectors.npz — pinned DPA conformance vectors.
+
+Seeded random operand codes for every (fmt_ab, fmt_acc, N) mode of Table I
+(finite lanes plus a specials-included batch for modes whose format has
+specials), with outputs computed by BOTH the golden model
+(`repro.core.dpa.dpa_codes`) and the exact big-int oracle
+(`repro.core.oracle`).  The generator refuses to write vectors where the
+two disagree outside the documented window bound, so the checked-in file
+is known-conformant at generation time; `test_dpa_golden.py` then replays
+it bit-for-bit, pinning the datapath against JAX / ml_dtypes version
+drift.
+
+Run from the repo root to regenerate (only needed when the DPA contract
+itself changes — a diff in this file's output is a *numerics break*):
+
+    PYTHONPATH=src python tests/golden/generate_dpa_vectors.py
+"""
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "..",
+                                "src"))
+
+from repro.core import dpa, formats as F, oracle  # noqa: E402
+
+MODES = [("fp16", "fp32", 2), ("fp8_e4m3", "fp32", 4),
+         ("fp4_e2m1", "fp32", 8), ("fp32", "fp32", 1),
+         ("fp16", "fp16", 2), ("fp8_e4m3", "fp16", 4)]
+LANES = 256
+SEED = 20260801
+
+
+def _finite_codes(rng, fmt, shape):
+    c = rng.integers(0, 1 << fmt.bits, size=shape).astype(np.uint32)
+    if fmt.special != "none":
+        vals = F.codes_to_np(c, fmt).astype(np.float64)
+        c = np.where(~np.isfinite(vals), c & (fmt.man_mask >> 1), c)
+    return c
+
+
+def _check_against_oracle(a, b, c, out, fa, fc, n, tag):
+    want = oracle.dpa_exact(a, b, c, fa, fc)
+    gf = F.codes_to_np(out, fc).astype(np.float64)
+    wf = F.codes_to_np(want, fc).astype(np.float64)
+    mism = (out != want) & ~(np.isnan(gf) & np.isnan(wf))
+    if mism.any():
+        W = dpa.default_window_bits(fc, n)
+        av = F.codes_to_np(a, fa).astype(np.float64)
+        bv = F.codes_to_np(b, fa).astype(np.float64)
+        cv = F.codes_to_np(c, fc).astype(np.float64)
+        mags = np.concatenate([np.abs(av * bv), np.abs(cv)[:, None]], 1)
+        anchor = np.log2(np.maximum(mags.max(1), 1e-300)) + 1
+        bad = mism & ~(np.abs(gf - wf) <= 2.0 ** (anchor - W + 3))
+        assert not bad.any(), f"{tag}: {bad.sum()} lanes outside the bound"
+
+
+def main(path):
+    rng = np.random.default_rng(SEED)
+    arrays = {}
+    for fmt_ab, fmt_acc, n in MODES:
+        fa, fc = F.get_format(fmt_ab), F.get_format(fmt_acc)
+        batches = {"finite": (_finite_codes(rng, fa, (LANES, n)),
+                              _finite_codes(rng, fa, (LANES, n)),
+                              _finite_codes(rng, fc, (LANES,)))}
+        if fa.special != "none" or fc.special != "none":
+            batches["specials"] = (
+                rng.integers(0, 1 << fa.bits, (LANES, n)).astype(np.uint32),
+                rng.integers(0, 1 << fa.bits, (LANES, n)).astype(np.uint32),
+                rng.integers(0, 1 << fc.bits,
+                             (LANES,), dtype=np.uint64).astype(np.uint32))
+        for kind, (a, b, c) in batches.items():
+            out = np.asarray(dpa.dpa_codes(a, b, c, fa, fc),
+                             dtype=np.uint32)
+            tag = f"{fmt_ab}_x{n}_{fmt_acc}_{kind}"
+            if kind == "finite":
+                _check_against_oracle(a, b, c, out, fa, fc, n, tag)
+            for name, arr in (("a", a), ("b", b), ("c", c), ("out", out)):
+                arrays[f"{tag}__{name}"] = arr
+    np.savez_compressed(path, **arrays)
+    print(f"wrote {path}: {len(arrays)} arrays, "
+          f"{os.path.getsize(path)} bytes")
+
+
+if __name__ == "__main__":
+    main(os.path.join(os.path.dirname(__file__), "dpa_vectors.npz"))

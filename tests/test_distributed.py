@@ -80,8 +80,9 @@ def test_compressed_allreduce_error_feedback():
         from jax.sharding import PartitionSpec as P
         from repro.distributed.collectives import ef_compress_allreduce
 
+        at = getattr(jax.sharding, "AxisType", None)
         mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+                             **({"axis_types": (at.Auto,)} if at else {}))
         g = jax.random.normal(jax.random.PRNGKey(0), (8, 1024), jnp.float32)
         true_mean = jnp.mean(g, axis=0)
 

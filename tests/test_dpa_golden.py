@@ -1,175 +1,72 @@
-"""Property tests: TransDot golden model vs the exact big-int oracle.
+"""Golden-vector replay: the DPA datapath pinned bit-for-bit.
 
-The contract (DESIGN.md §4): bit-exact vs the exact single-rounded sum
-whenever cancellation does not dig below the accumulation window; a
-bounded absolute error 2^(anchor - W + 3) otherwise; bit-exact always
-with a wide window.  Plus IEEE special-value propagation and the FPnew
-sequential-FMA baseline semantics.
+`tests/golden/dpa_vectors.npz` holds seeded operand codes and golden-model
+outputs for every (fmt_ab, fmt_acc, N) mode (generated — and verified
+against the exact big-int oracle — by `tests/golden/
+generate_dpa_vectors.py`).  Replaying them catches silent numerics drift
+from JAX / ml_dtypes / XLA upgrades that the property suite, which
+regenerates both sides on every run, structurally cannot: if the model and
+its test inputs drift *together*, only a pinned file notices.
+
+A mismatch here is a numerics break in `repro.core.dpa` (or an intended
+contract change — in which case regenerate the vectors and flag the diff
+in review).
 """
+import os
+
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
-from repro.core import dpa, formats as F, oracle
-from repro.core.fpnew_ref import sequential_fma_codes
+from repro.core import dpa, formats as F
 
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "dpa_vectors.npz")
 MODES = [("fp16", "fp32", 2), ("fp8_e4m3", "fp32", 4),
          ("fp4_e2m1", "fp32", 8), ("fp32", "fp32", 1),
          ("fp16", "fp16", 2), ("fp8_e4m3", "fp16", 4)]
 
 
-def _rand_codes(rng, fmt, shape, specials=False):
-    c = rng.integers(0, 1 << fmt.bits, size=shape).astype(np.uint32)
-    if not specials and fmt.special != "none":
-        # remap NaN/inf codes into finite space
-        vals = F.codes_to_np(c, fmt).astype(np.float64)
-        bad = ~np.isfinite(vals)
-        c = np.where(bad, c & (fmt.man_mask >> 1), c)
-    return c
+@pytest.fixture(scope="module")
+def vectors():
+    assert os.path.exists(GOLDEN), (
+        f"{GOLDEN} missing — run PYTHONPATH=src python "
+        f"tests/golden/generate_dpa_vectors.py")
+    return np.load(GOLDEN)
+
+
+def _replay(vectors, tag, fmt_ab, fmt_acc):
+    a = vectors[f"{tag}__a"]
+    b = vectors[f"{tag}__b"]
+    c = vectors[f"{tag}__c"]
+    want = vectors[f"{tag}__out"]
+    got = np.asarray(dpa.dpa_codes(a, b, c, F.get_format(fmt_ab),
+                                   F.get_format(fmt_acc)))
+    mism = got != want
+    assert not mism.any(), (
+        f"{tag}: {mism.sum()}/{mism.size} lanes drifted from the golden "
+        f"vectors; first: a={a[mism][0]} b={b[mism][0]} "
+        f"c={c[mism.reshape(c.shape)][0] if c.shape == mism.shape else '?'} "
+        f"got={hex(int(got[mism][0]))} want={hex(int(want[mism][0]))}")
 
 
 @pytest.mark.parametrize("fmt_ab,fmt_acc,n", MODES,
                          ids=[f"{a}x{n}to{c}" for a, c, n in MODES])
-def test_bitexact_vs_oracle_random(fmt_ab, fmt_acc, n):
-    """Random finite operands across the FULL code space (subnormals,
-    extreme exponents included): windowed result must be bit-exact except
-    for deep cancellation, which must obey the window error bound."""
-    fa, fc = F.get_format(fmt_ab), F.get_format(fmt_acc)
-    rng = np.random.default_rng(42)
-    trials = 1500
-    a = _rand_codes(rng, fa, (trials, n))
-    b = _rand_codes(rng, fa, (trials, n))
-    c = _rand_codes(rng, fc, (trials,))
-    got = np.asarray(dpa.dpa_codes(a, b, c, fa, fc))
-    want = oracle.dpa_exact(a, b, c, fa, fc)
-    gf = F.codes_to_np(got, fc).astype(np.float64)
-    wf = F.codes_to_np(want, fc).astype(np.float64)
-    mismatch = (got != want) & ~(np.isnan(gf) & np.isnan(wf))
-    if mismatch.any():
-        # allowed only under the window-loss bound
-        W = dpa.default_window_bits(fc, n)
-        av = F.codes_to_np(a, fa).astype(np.float64)
-        bv = F.codes_to_np(b, fa).astype(np.float64)
-        cv = F.codes_to_np(c, fc).astype(np.float64)
-        mags = np.concatenate([np.abs(av * bv),
-                               np.abs(cv)[:, None]], axis=1)
-        anchor = np.log2(np.maximum(mags.max(axis=1), 1e-300)) + 1
-        bound = 2.0 ** (anchor - W + 3)
-        err = np.abs(gf - wf)
-        bad = mismatch & ~(err <= bound)
-        assert not bad.any(), (
-            f"{bad.sum()} results outside window bound; "
-            f"first: a={av[bad][0] if bad.any() else None}")
+def test_golden_replay_finite(vectors, fmt_ab, fmt_acc, n):
+    _replay(vectors, f"{fmt_ab}_x{n}_{fmt_acc}_finite", fmt_ab, fmt_acc)
 
 
-@pytest.mark.parametrize("fmt_ab,fmt_acc,n", MODES[:3],
-                         ids=[f"{a}x{n}" for a, c, n in MODES[:3]])
-def test_bitexact_wide_window(fmt_ab, fmt_acc, n):
-    """With a 140-bit window the model must match the oracle everywhere,
-    including engineered catastrophic cancellation."""
-    fa, fc = F.get_format(fmt_ab), F.get_format(fmt_acc)
-    rng = np.random.default_rng(7)
-    a = _rand_codes(rng, fa, (800, n))
-    b = _rand_codes(rng, fa, (800, n))
-    # force pairwise cancellation: b1 = -b0, a1 = a0
-    if n >= 2:
-        b[:, 1] = b[:, 0] ^ (1 << (fa.bits - 1))
-        a[:, 1] = a[:, 0]
-    # c within a moderate range so (product span + c span) fits the wide
-    # window — the full-code-space regime is covered (with the window
-    # bound) by test_bitexact_vs_oracle_random
-    c = F.float_to_codes(rng.normal(size=800) * 1e3, fc)
-    got = np.asarray(dpa.dpa_codes(a, b, c, fa, fc, window_bits=140))
-    want = oracle.dpa_exact(a, b, c, fa, fc)
-    gf = F.codes_to_np(got, fc).astype(np.float64)
-    wf = F.codes_to_np(want, fc).astype(np.float64)
-    ok = (got == want) | (np.isnan(gf) & np.isnan(wf))
-    assert ok.all(), f"{(~ok).sum()} mismatches with wide window"
+@pytest.mark.parametrize("fmt_ab,fmt_acc,n", MODES,
+                         ids=[f"{a}x{n}to{c}" for a, c, n in MODES])
+def test_golden_replay_specials(vectors, fmt_ab, fmt_acc, n):
+    """Full-code-space batches (NaN/Inf codes included) replay bit-for-bit
+    — NaN encodings are pinned too, not just NaN-ness."""
+    tag = f"{fmt_ab}_x{n}_{fmt_acc}_specials"
+    if f"{tag}__a" not in vectors:
+        pytest.skip("mode has no specials batch")
+    _replay(vectors, tag, fmt_ab, fmt_acc)
 
 
-@given(st.integers(0, 2 ** 16 - 1), st.integers(0, 2 ** 16 - 1),
-       st.integers(0, 2 ** 32 - 1))
-@settings(max_examples=300, deadline=None)
-def test_fma_correctly_rounded_hypothesis(ac, bc, cc):
-    """Scalar trans-precision FMA (N=1) is correctly rounded for ALL
-    inputs — the hardware 3p+4 exactness property."""
-    a = np.array([[ac]], np.uint32)
-    b = np.array([[bc]], np.uint32)
-    c = np.array([cc], np.uint32)
-    got = np.asarray(dpa.dpa_codes(a, b, c, F.FP16, F.FP32))
-    want = oracle.dpa_exact(a, b, c, F.FP16, F.FP32)
-    gf = F.codes_to_np(got, F.FP32).astype(np.float64)
-    wf = F.codes_to_np(want, F.FP32).astype(np.float64)
-    assert (got == want).all() or (np.isnan(gf) & np.isnan(wf)).all()
-
-
-def test_special_values():
-    fa, fc = F.FP16, F.FP32
-    inf = 0x7C00
-    ninf = 0xFC00
-    nan = 0x7E00
-    one = 0x3C00
-    zero = 0x0000
-    cases = [
-        # (a, b), c -> predicate on float result
-        ([(inf, one), (one, one)], 0, lambda v: v == np.inf),
-        ([(ninf, one), (one, one)], 0, lambda v: v == -np.inf),
-        ([(inf, zero), (one, one)], 0, np.isnan),        # inf * 0
-        ([(inf, one), (ninf, one)], 0, np.isnan),        # inf - inf
-        ([(nan, one), (one, one)], 0, np.isnan),
-        ([(one, one), (one, one)], 0x7F800000, lambda v: v == np.inf),
-        ([(one, one), (one, one)], 0xFF800000, lambda v: v == -np.inf),
-        ([(inf, one), (one, one)], 0xFF800000, np.isnan),
-    ]
-    for terms, c, pred in cases:
-        a = np.array([[t[0] for t in terms]], np.uint32)
-        b = np.array([[t[1] for t in terms]], np.uint32)
-        out = np.asarray(dpa.dpa_codes(a, b, np.array([c], np.uint32),
-                                       fa, fc))
-        v = F.codes_to_np(out, fc).astype(np.float64)[0]
-        assert pred(v), (terms, c, v)
-
-
-def test_signed_zero():
-    fa, fc = F.FP16, F.FP32
-    nzero16 = 0x8000
-    nzero32 = np.uint32(0x80000000)
-    a = np.array([[nzero16, nzero16]], np.uint32)
-    b = np.array([[0x3C00, 0x3C00]], np.uint32)   # -0 * 1 = -0 twice
-    out = np.asarray(dpa.dpa_codes(a, b, np.array([nzero32]), fa, fc))[0]
-    assert out == 0x80000000                       # all -0 -> -0
-    out = np.asarray(dpa.dpa_codes(a, b, np.array([0], np.uint32),
-                                   fa, fc))[0]
-    assert out == 0                                # mixed signs -> +0
-
-
-def test_dpa_single_rounding_beats_sequential():
-    """The paper's numerics motivation: DPA (one rounding) accumulates
-    less error than FPnew sequential FMA (N roundings) on long dots."""
-    rng = np.random.default_rng(3)
-    n, trials = 4, 400
-    fa, fc = F.FP8_E4M3, F.FP16     # coarse accumulate fmt shows the gap
-    a = rng.normal(size=(trials, n))
-    b = rng.normal(size=(trials, n))
-    ac = F.float_to_codes(a, fa)
-    bc = F.float_to_codes(b, fa)
-    cc = np.zeros(trials, np.uint32)
-    av = F.codes_to_np(ac, fa).astype(np.float64)
-    bv = F.codes_to_np(bc, fa).astype(np.float64)
-    exact = (av * bv).sum(1)
-    got_dpa = F.codes_to_np(np.asarray(dpa.dpa_codes(ac, bc, cc, fa, fc)),
-                            fc).astype(np.float64)
-    got_seq = F.codes_to_np(np.asarray(sequential_fma_codes(ac, bc, cc,
-                                                            fa, fc)),
-                            fc).astype(np.float64)
-    err_dpa = np.abs(got_dpa - exact).mean()
-    err_seq = np.abs(got_seq - exact).mean()
-    assert err_dpa <= err_seq * 1.001
-
-
-def test_fp16_accumulate_mode():
-    """Table I: FP16 accumulate output format."""
-    rng = np.random.default_rng(5)
-    a = rng.normal(size=(200, 2))
-    out = dpa.dpa(a, a, np.zeros(200), "fp16", "fp16")
-    assert np.isfinite(out).all() and (out >= 0).all()
+def test_golden_file_covers_all_modes(vectors):
+    names = set(vectors.files)
+    for fmt_ab, fmt_acc, n in MODES:
+        assert f"{fmt_ab}_x{n}_{fmt_acc}_finite__out" in names, (fmt_ab, n)

@@ -1,0 +1,301 @@
+"""DPA conformance suite: TransDot golden model vs the exact big-int oracle.
+
+Seeded randomized property tests driving `dpa_codes` against
+`core.oracle.dpa_exact` across every (fmt_ab, N) mode of Table I —
+fp16/N=2, fp8_e4m3/N=4, fp4_e2m1/N=8, plus the scalar and fp16-accumulate
+modes.  The contract (DESIGN.md §4): bit-exact vs the exact single-rounded
+sum whenever cancellation does not dig below the accumulation window; a
+bounded absolute error 2^(anchor - W + 3) otherwise; bit-exact always with
+a wide window.  Dedicated cases cover RNE ties, signed zeros, subnormal
+operands, and NaN/Inf propagation, plus the FPnew sequential-FMA baseline
+semantics.
+"""
+import numpy as np
+import pytest
+
+from repro.core import dpa, formats as F, oracle
+from repro.core.fpnew_ref import sequential_fma_codes
+
+MODES = [("fp16", "fp32", 2), ("fp8_e4m3", "fp32", 4),
+         ("fp4_e2m1", "fp32", 8), ("fp32", "fp32", 1),
+         ("fp16", "fp16", 2), ("fp8_e4m3", "fp16", 4)]
+
+
+def _rand_codes(rng, fmt, shape, specials=False):
+    c = rng.integers(0, 1 << fmt.bits, size=shape).astype(np.uint32)
+    if not specials and fmt.special != "none":
+        # remap NaN/inf codes into finite space
+        vals = F.codes_to_np(c, fmt).astype(np.float64)
+        bad = ~np.isfinite(vals)
+        c = np.where(bad, c & (fmt.man_mask >> 1), c)
+    return c
+
+
+def _assert_conformant(a, b, c, fmt_ab, fmt_acc, n, *, window_bits=None):
+    """got == oracle bit-for-bit, except under the window-loss bound."""
+    fa, fc = F.get_format(fmt_ab), F.get_format(fmt_acc)
+    got = np.asarray(dpa.dpa_codes(a, b, c, fa, fc, window_bits))
+    want = oracle.dpa_exact(a, b, c, fa, fc)
+    gf = F.codes_to_np(got, fc).astype(np.float64)
+    wf = F.codes_to_np(want, fc).astype(np.float64)
+    mismatch = (got != want) & ~(np.isnan(gf) & np.isnan(wf))
+    if mismatch.any():
+        W = window_bits or dpa.default_window_bits(fc, n)
+        av = F.codes_to_np(a, fa).astype(np.float64)
+        bv = F.codes_to_np(b, fa).astype(np.float64)
+        cv = F.codes_to_np(c, fc).astype(np.float64)
+        mags = np.concatenate([np.abs(av * bv),
+                               np.abs(cv)[:, None]], axis=1)
+        anchor = np.log2(np.maximum(mags.max(axis=1), 1e-300)) + 1
+        bound = 2.0 ** (anchor - W + 3)
+        err = np.abs(gf - wf)
+        bad = mismatch & ~(err <= bound)
+        assert not bad.any(), (
+            f"{bad.sum()} results outside the window bound; first bad lane: "
+            f"a={av[bad][0]} b={bv[bad][0]} c={cv[bad][0]} "
+            f"got={gf[bad][0]} want={wf[bad][0]}")
+
+
+@pytest.mark.parametrize("fmt_ab,fmt_acc,n", MODES,
+                         ids=[f"{a}x{n}to{c}" for a, c, n in MODES])
+def test_bitexact_vs_oracle_random(fmt_ab, fmt_acc, n):
+    """Random finite operands across the FULL code space (subnormals,
+    extreme exponents included)."""
+    fa, fc = F.get_format(fmt_ab), F.get_format(fmt_acc)
+    rng = np.random.default_rng(42)
+    trials = 1500
+    a = _rand_codes(rng, fa, (trials, n))
+    b = _rand_codes(rng, fa, (trials, n))
+    c = _rand_codes(rng, fc, (trials,))
+    _assert_conformant(a, b, c, fmt_ab, fmt_acc, n)
+
+
+@pytest.mark.parametrize("fmt_ab,fmt_acc,n", MODES,
+                         ids=[f"{a}x{n}to{c}" for a, c, n in MODES])
+def test_subnormal_operands(fmt_ab, fmt_acc, n):
+    """All-subnormal operand lanes (e_raw == 0): the alignment shifter's
+    denormal corner.  Products are tiny so the window anchors low and the
+    result must still be bit-exact."""
+    fa, fc = F.get_format(fmt_ab), F.get_format(fmt_acc)
+    rng = np.random.default_rng(7)
+    trials = 600
+    # codes with zero exponent field: sign x subnormal fraction
+    sub = fa.man_mask + 1          # number of (sign-less) subnormal codes
+    a = rng.integers(0, sub, size=(trials, n)).astype(np.uint32) \
+        | (rng.integers(0, 2, size=(trials, n)).astype(np.uint32)
+           << (fa.bits - 1))
+    b = rng.integers(0, sub, size=(trials, n)).astype(np.uint32) \
+        | (rng.integers(0, 2, size=(trials, n)).astype(np.uint32)
+           << (fa.bits - 1))
+    c = _rand_codes(rng, fc, (trials,))
+    _assert_conformant(a, b, c, fmt_ab, fmt_acc, n)
+    # and with a subnormal addend too
+    csub = rng.integers(0, fc.man_mask + 1, size=trials).astype(np.uint32)
+    _assert_conformant(a, b, csub, fmt_ab, fmt_acc, n)
+
+
+@pytest.mark.parametrize("fmt_ab,fmt_acc,n", MODES[:3],
+                         ids=[f"{a}x{n}" for a, c, n in MODES[:3]])
+def test_rne_ties(fmt_ab, fmt_acc, n):
+    """Engineered RNE tie cases: a large product plus a term that lands
+    exactly half an ulp below the large term's grid.  The oracle computes
+    the exact single-rounded answer, so bit-equality proves ties-to-even.
+
+    Construction: a0*b0 = 1.0 (code of 1.0 squared), a1*b1 = +-2^-e with e
+    chosen so the sum sits exactly between two fmt_acc values.  For fp32
+    (p=24) 1.0 + 2^-25 is a tie -> rounds down to 1.0 (even); 1.5 + 2^-25
+    is representable-adjacent; we sweep products of +-2^-k around p."""
+    fa, fc = F.get_format(fmt_ab), F.get_format(fmt_acc)
+    one = int(F.float_to_codes(np.array(1.0), fa)[()])
+    lanes = []
+    # powers of two representable in fmt_ab (normal range)
+    pows = [2.0 ** k for k in range(fa.emin, fa.emax + 1)]
+    for p2 in pows:
+        for sign in (1.0, -1.0):
+            a = [one] * n
+            b = [one] * n
+            # second term: sqrt-free tie generator — p2 * 1.0 product
+            tie = int(F.float_to_codes(np.array(sign * p2), fa)[()])
+            if n >= 2:
+                a[1] = tie
+                b[1] = one
+            lanes.append((a, b))
+    a = np.array([l[0] for l in lanes], np.uint32)
+    b = np.array([l[1] for l in lanes], np.uint32)
+    # addends at half-ulp offsets of 1.0 in fmt_acc: 2^-(p), 2^-(p+1)
+    for k in (fc.precision, fc.precision + 1, fc.precision + 2):
+        for cs in (1.0, -1.0):
+            c_val = np.full(len(lanes), cs * 2.0 ** -k)
+            c = F.float_to_codes(c_val, fc)
+            _assert_conformant(a, b, c, fmt_ab, fmt_acc, n)
+
+
+def test_rne_tie_to_even_explicit():
+    """Pin the canonical fp32 ties: 1 + 2^-25 -> 1.0 (down to even) and
+    (1 + 2^-23) + 2^-24 -> 1 + 2^-22 ulp step (up to even)."""
+    fa, fc = F.FP16, F.FP32
+    one16 = 0x3C00
+    a = np.array([[one16, 0]], np.uint32)
+    b = np.array([[one16, 0]], np.uint32)
+    # c = 2^-25: exact sum 1 + 2^-25, tie -> 1.0
+    c = F.float_to_codes(np.array([2.0 ** -25]), fc)
+    got = np.asarray(dpa.dpa_codes(a, b, c, fa, fc))[0]
+    assert got == 0x3F800000, hex(int(got))
+    # c = 3 * 2^-25 = 2^-24 + 2^-25: tie between 1+2^-24... exact sum
+    # 1 + 3*2^-25 lies between 1+2^-24 (ulp/2 above) -> nearest is 1+2^-23?
+    # Use the oracle to avoid hand-rounding mistakes on this one.
+    c = F.float_to_codes(np.array([3.0 * 2.0 ** -25]), fc)
+    got = np.asarray(dpa.dpa_codes(a, b, c, fa, fc))
+    want = oracle.dpa_exact(a, b, c, fa, fc)
+    assert got[0] == want[0]
+
+
+@pytest.mark.parametrize("fmt_ab,fmt_acc,n", MODES[:3],
+                         ids=[f"{a}x{n}" for a, c, n in MODES[:3]])
+def test_bitexact_wide_window(fmt_ab, fmt_acc, n):
+    """With a 140-bit window the model must match the oracle everywhere,
+    including engineered catastrophic cancellation."""
+    fa, fc = F.get_format(fmt_ab), F.get_format(fmt_acc)
+    rng = np.random.default_rng(7)
+    a = _rand_codes(rng, fa, (800, n))
+    b = _rand_codes(rng, fa, (800, n))
+    # force pairwise cancellation: b1 = -b0, a1 = a0
+    if n >= 2:
+        b[:, 1] = b[:, 0] ^ (1 << (fa.bits - 1))
+        a[:, 1] = a[:, 0]
+    # c within a moderate range so (product span + c span) fits the wide
+    # window — the full-code-space regime is covered (with the window
+    # bound) by test_bitexact_vs_oracle_random
+    c = F.float_to_codes(rng.normal(size=800) * 1e3, fc)
+    got = np.asarray(dpa.dpa_codes(a, b, c, fa, fc, window_bits=140))
+    want = oracle.dpa_exact(a, b, c, fa, fc)
+    gf = F.codes_to_np(got, fc).astype(np.float64)
+    wf = F.codes_to_np(want, fc).astype(np.float64)
+    ok = (got == want) | (np.isnan(gf) & np.isnan(wf))
+    assert ok.all(), f"{(~ok).sum()} mismatches with wide window"
+
+
+@pytest.mark.parametrize("trial", range(6))
+def test_fma_correctly_rounded_random(trial):
+    """Scalar trans-precision FMA (N=1) is correctly rounded for random
+    inputs across the full fp16 x fp16 + fp32 code space — the hardware
+    3p+4 exactness property (seeded sweep, 6 x 500 lanes)."""
+    rng = np.random.default_rng(5000 + trial)
+    a = rng.integers(0, 1 << 16, size=(500, 1)).astype(np.uint32)
+    b = rng.integers(0, 1 << 16, size=(500, 1)).astype(np.uint32)
+    c = rng.integers(0, 1 << 32, size=500, dtype=np.uint64).astype(np.uint32)
+    got = np.asarray(dpa.dpa_codes(a, b, c, F.FP16, F.FP32))
+    want = oracle.dpa_exact(a, b, c, F.FP16, F.FP32)
+    gf = F.codes_to_np(got, F.FP32).astype(np.float64)
+    wf = F.codes_to_np(want, F.FP32).astype(np.float64)
+    ok = (got == want) | (np.isnan(gf) & np.isnan(wf))
+    assert ok.all(), f"{(~ok).sum()} scalar FMA mismatches"
+
+
+def test_special_values():
+    fa, fc = F.FP16, F.FP32
+    inf = 0x7C00
+    ninf = 0xFC00
+    nan = 0x7E00
+    one = 0x3C00
+    zero = 0x0000
+    cases = [
+        # (a, b), c -> predicate on float result
+        ([(inf, one), (one, one)], 0, lambda v: v == np.inf),
+        ([(ninf, one), (one, one)], 0, lambda v: v == -np.inf),
+        ([(inf, zero), (one, one)], 0, np.isnan),        # inf * 0
+        ([(inf, one), (ninf, one)], 0, np.isnan),        # inf - inf
+        ([(nan, one), (one, one)], 0, np.isnan),
+        ([(one, one), (one, one)], 0x7F800000, lambda v: v == np.inf),
+        ([(one, one), (one, one)], 0xFF800000, lambda v: v == -np.inf),
+        ([(inf, one), (one, one)], 0xFF800000, np.isnan),
+    ]
+    for terms, c, pred in cases:
+        a = np.array([[t[0] for t in terms]], np.uint32)
+        b = np.array([[t[1] for t in terms]], np.uint32)
+        out = np.asarray(dpa.dpa_codes(a, b, np.array([c], np.uint32),
+                                       fa, fc))
+        v = F.codes_to_np(out, fc).astype(np.float64)[0]
+        assert pred(v), (terms, c, v)
+
+
+def test_special_values_e5m2_and_fn_nan():
+    """OCP specials: fp8-e5m2 has IEEE-like inf/NaN; fp8-e4m3 ("fn") has
+    only the all-ones NaN and must saturate instead of overflowing."""
+    # e5m2: inf * 1 -> inf through the N=4 datapath
+    f8 = F.FP8_E5M2
+    inf8 = int(F.np_to_codes(np.array(np.inf), f8)[()])
+    one8 = int(F.np_to_codes(np.array(1.0), f8)[()])
+    a = np.array([[inf8, one8, 0, 0]], np.uint32)
+    b = np.array([[one8, one8, 0, 0]], np.uint32)
+    out = np.asarray(dpa.dpa_codes(a, b, np.zeros(1, np.uint32), f8, F.FP32))
+    assert F.codes_to_np(out, F.FP32)[0] == np.inf
+    # e4m3 fn NaN in -> NaN out
+    f8fn = F.FP8_E4M3
+    nanfn = F.nan_code(f8fn)
+    a = np.array([[nanfn, one8, 0, 0]], np.uint32)
+    out = np.asarray(dpa.dpa_codes(a, b, np.zeros(1, np.uint32), f8fn,
+                                   F.FP32))
+    assert np.isnan(F.codes_to_np(out, F.FP32)[0])
+
+
+def test_signed_zero():
+    fa, fc = F.FP16, F.FP32
+    nzero16 = 0x8000
+    nzero32 = np.uint32(0x80000000)
+    a = np.array([[nzero16, nzero16]], np.uint32)
+    b = np.array([[0x3C00, 0x3C00]], np.uint32)   # -0 * 1 = -0 twice
+    out = np.asarray(dpa.dpa_codes(a, b, np.array([nzero32]), fa, fc))[0]
+    assert out == 0x80000000                       # all -0 -> -0
+    out = np.asarray(dpa.dpa_codes(a, b, np.array([0], np.uint32),
+                                   fa, fc))[0]
+    assert out == 0                                # mixed signs -> +0
+
+
+def test_signed_zero_all_modes():
+    """Sum-of-zeros sign rule holds in every (fmt_ab, N) mode: all negative
+    zeros -> -0, any positive zero in the mix -> +0."""
+    for fmt_ab, fmt_acc, n in MODES:
+        fa, fc = F.get_format(fmt_ab), F.get_format(fmt_acc)
+        nz = 1 << (fa.bits - 1)                    # -0 in fmt_ab
+        onec = int(F.float_to_codes(np.array(1.0), fa)[()])
+        a = np.full((1, n), nz, np.uint32)
+        b = np.full((1, n), onec, np.uint32)
+        ncz = np.array([1 << (fc.bits - 1)], np.uint32)
+        out = np.asarray(dpa.dpa_codes(a, b, ncz, fa, fc))[0]
+        assert out == (1 << (fc.bits - 1)), (fmt_ab, fmt_acc, hex(int(out)))
+        out = np.asarray(dpa.dpa_codes(a, b, np.zeros(1, np.uint32),
+                                       fa, fc))[0]
+        assert out == 0, (fmt_ab, fmt_acc, hex(int(out)))
+
+
+def test_dpa_single_rounding_beats_sequential():
+    """The paper's numerics motivation: DPA (one rounding) accumulates
+    less error than FPnew sequential FMA (N roundings) on long dots."""
+    rng = np.random.default_rng(3)
+    n, trials = 4, 400
+    fa, fc = F.FP8_E4M3, F.FP16     # coarse accumulate fmt shows the gap
+    a = rng.normal(size=(trials, n))
+    b = rng.normal(size=(trials, n))
+    ac = F.float_to_codes(a, fa)
+    bc = F.float_to_codes(b, fa)
+    cc = np.zeros(trials, np.uint32)
+    av = F.codes_to_np(ac, fa).astype(np.float64)
+    bv = F.codes_to_np(bc, fa).astype(np.float64)
+    exact = (av * bv).sum(1)
+    got_dpa = F.codes_to_np(np.asarray(dpa.dpa_codes(ac, bc, cc, fa, fc)),
+                            fc).astype(np.float64)
+    got_seq = F.codes_to_np(np.asarray(sequential_fma_codes(ac, bc, cc,
+                                                            fa, fc)),
+                            fc).astype(np.float64)
+    err_dpa = np.abs(got_dpa - exact).mean()
+    err_seq = np.abs(got_seq - exact).mean()
+    assert err_dpa <= err_seq * 1.001
+
+
+def test_fp16_accumulate_mode():
+    """Table I: FP16 accumulate output format."""
+    rng = np.random.default_rng(5)
+    a = rng.normal(size=(200, 2))
+    out = dpa.dpa(a, a, np.zeros(200), "fp16", "fp16")
+    assert np.isfinite(out).all() and (out >= 0).all()

@@ -1,7 +1,6 @@
 """Format decode/encode vs ml_dtypes ground truth + quantization laws."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
@@ -41,12 +40,14 @@ def test_max_finite_and_min_subnormal(fmt):
     assert pos.min() == fmt.min_subnormal
 
 
-@given(st.lists(st.floats(-1e4, 1e4, allow_nan=False), min_size=4,
-                max_size=64))
-@settings(max_examples=50, deadline=None)
-def test_quant_dequant_error_bound(xs):
-    """|x - qdq(x)| <= scale * ulp/2 elementwise for fp8 per-tensor."""
-    x = jnp.asarray(np.array(xs, np.float32))
+@pytest.mark.parametrize("trial", range(20))
+def test_quant_dequant_error_bound(trial):
+    """|x - qdq(x)| <= scale * ulp/2 elementwise for fp8 per-tensor
+    (seeded randomized sweep over magnitudes up to 1e4, incl. tiny)."""
+    rng = np.random.default_rng(1000 + trial)
+    n = int(rng.integers(4, 65))
+    mag = 10.0 ** rng.uniform(-4, 4)
+    x = jnp.asarray(rng.uniform(-mag, mag, size=n).astype(np.float32))
     q, s = _quant(x, "fp8_e4m3")
     err = np.abs(np.asarray(_deq(q, s)) - np.asarray(x))
     scale = float(np.asarray(s).max())

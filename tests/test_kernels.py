@@ -62,6 +62,126 @@ def test_dpa_matmul_policy_wrapper_padding(pol):
     assert rel < tol, (pol, rel)
 
 
+# -----------------------------------------------------------------------------
+# packed-operand and fused-quantize pipelines
+# -----------------------------------------------------------------------------
+
+BLOCKS = [(128, 128, 128), (64, 256, 128), (128, 64, 256), (256, 128, 64)]
+
+
+@pytest.mark.parametrize("bm,bk,bn", BLOCKS)
+@pytest.mark.parametrize("pack_x,pack_w", [(True, True), (True, False),
+                                           (False, True)])
+def test_packed_fp4_bit_identical_to_unpacked(pack_x, pack_w, bm, bk, bn):
+    """The tentpole contract: packing is pure I/O layout.  Moving fp4
+    operands as 2-codes-per-byte through the BlockSpec and unpacking
+    nibbles in VMEM must be BIT-identical to the byte-per-code path,
+    across square and non-square blocks."""
+    from repro.core.packing import pack_fp4_axis
+    M, K, N = 256, 512, 256
+    x = jax.random.normal(jax.random.PRNGKey(10), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(11), (K, N), jnp.float32)
+    xq, sx = _quant_operand(x, "fp4_e2m1", -1)
+    wq, sw = _quant_operand(w, "fp4_e2m1", 0)
+    base = np.asarray(dm.dpa_matmul_prequant(
+        xq, wq, sx, sw, fmt_x="fp4_e2m1", fmt_w="fp4_e2m1",
+        bm=bm, bk=bk, bn=bn, interpret=True))
+    got = np.asarray(dm.dpa_matmul_prequant(
+        pack_fp4_axis(xq, 1) if pack_x else xq,
+        pack_fp4_axis(wq, 0) if pack_w else wq,
+        sx, sw, fmt_x="fp4_e2m1", fmt_w="fp4_e2m1", bm=bm, bk=bk, bn=bn,
+        pack_x=pack_x, pack_w=pack_w, interpret=True))
+    assert np.array_equal(got, base), (pack_x, pack_w, bm, bk, bn)
+
+
+@pytest.mark.parametrize("fmt_x", ["fp8_e4m3", "fp4_e2m1", "fp16"])
+@pytest.mark.parametrize("bm,bk,bn", BLOCKS)
+def test_fused_quantize_matmul_vs_ref(fmt_x, bm, bk, bn):
+    """Fused in-kernel quantization == the blockwise-quantize reference
+    (per-(row, K-block) scales), across formats x block shapes."""
+    M, K, N = 256, 512, 256
+    x = jax.random.normal(jax.random.PRNGKey(20), (M, K), jnp.float32) * 3
+    w = jax.random.normal(jax.random.PRNGKey(21), (K, N), jnp.float32)
+    wq, sw = _quant_operand(w, "fp8_e4m3", 0)
+    got = dm.dpa_matmul_fused(x, wq, sw, fmt_x=fmt_x, fmt_w="fp8_e4m3",
+                              bm=bm, bk=bk, bn=bn, interpret=True)
+    want = ref.dpa_matmul_fused_ref(x, wq, sw, fmt_x=fmt_x,
+                                    fmt_w="fp8_e4m3", bk=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("bm,bk,bn", BLOCKS[:2])
+def test_fused_packed_w_bit_identical(bm, bk, bn):
+    """Packed weights through the FUSED kernel == unpacked weights through
+    the fused kernel, bit for bit."""
+    from repro.core.packing import pack_fp4_axis
+    M, K, N = 128, 256, 128
+    x = jax.random.normal(jax.random.PRNGKey(30), (M, K), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(31), (K, N), jnp.float32)
+    wq, sw = _quant_operand(w, "fp4_e2m1", 0)
+    base = np.asarray(dm.dpa_matmul_fused(
+        x, wq, sw, fmt_x="fp8_e4m3", fmt_w="fp4_e2m1",
+        bm=bm, bk=bk, bn=bn, interpret=True))
+    got = np.asarray(dm.dpa_matmul_fused(
+        x, pack_fp4_axis(wq, 0), sw, fmt_x="fp8_e4m3", fmt_w="fp4_e2m1",
+        bm=bm, bk=bk, bn=bn, pack_w=True, interpret=True))
+    assert np.array_equal(got, base)
+
+
+@pytest.mark.parametrize("pol", ["fp4_dpa_packed", "fp4_dpa_fused",
+                                 "fp8_dpa_fused", "w4a8_packed"])
+def test_packed_fused_policy_wrapper(pol):
+    """Policy-selected packed/fused paths survive padding on non-aligned
+    shapes and stay close to the f32 answer."""
+    x = jax.random.normal(jax.random.PRNGKey(40), (100, 200), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(41), (200, 72), jnp.float32)
+    y = O.dpa_matmul(x, w, get_policy(pol))
+    want = x @ w
+    rel = float(jnp.abs(y - want).max() / jnp.abs(want).max())
+    tol = {"fp4_dpa_packed": 0.35, "fp4_dpa_fused": 0.35,
+           "fp8_dpa_fused": 0.1, "w4a8_packed": 0.35}[pol]
+    assert rel < tol, (pol, rel)
+
+
+def test_packed_policy_bit_identical_via_wrapper():
+    """End-to-end `ops.dpa_matmul`: the packed preset reproduces the
+    unpacked preset's result bit for bit (same formats, same scales)."""
+    x = jax.random.normal(jax.random.PRNGKey(50), (128, 256), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(51), (256, 128), jnp.float32)
+    unpacked = get_policy("fp4_dpa_packed").replace(packed=False)
+    a = np.asarray(O.dpa_matmul(x, w, unpacked))
+    b = np.asarray(O.dpa_matmul(x, w, get_policy("fp4_dpa_packed")))
+    assert np.array_equal(a, b)
+
+
+def test_quantize_pack_rows_matches_unpacked():
+    """Fused quantize->pack kernel: packed bytes unpack to exactly the
+    codes the unpacked quantize kernel emits; scales identical."""
+    from repro.core.packing import unpack_fp4_axis
+    x = jax.random.normal(jax.random.PRNGKey(60), (130, 64), jnp.float32)
+    qp, sp = O.quantize_rows(x, "fp4_e2m1", pack=True)
+    q, s = O.quantize_rows(x, "fp4_e2m1")
+    assert qp.shape == (130, 32) and qp.dtype == jnp.uint8
+    assert np.array_equal(np.asarray(unpack_fp4_axis(qp, 1)), np.asarray(q))
+    np.testing.assert_array_equal(np.asarray(sp), np.asarray(s))
+
+
+def test_operand_bytes_moved_ratios():
+    """The paper's Table I bandwidth story: fp16/fp8/packed-fp4 operands
+    move 2x/4x/8x fewer bytes than f32 through the interface."""
+    from repro.core.packing import matmul_operand_bytes, operand_nbytes
+    n = 1 << 20
+    assert operand_nbytes(n, "fp16") * 2 == 4 * n
+    assert operand_nbytes(n, "fp8_e4m3") * 4 == 4 * n
+    assert operand_nbytes(n, "fp4_e2m1", packed=True) * 8 == 4 * n
+    assert operand_nbytes(n, "fp4_e2m1", packed=False) * 4 == 4 * n
+    for pol, ratio in (("fp16_dpa", 2.0), ("fp8_dpa", 4.0),
+                       ("fp4_dpa_packed", 8.0)):
+        got = matmul_operand_bytes(4096, 4096, 4096, pol)["reduction_vs_f32"]
+        assert abs(got - ratio) / ratio < 0.02, (pol, got)
+
+
 @pytest.mark.parametrize("fmt", FMTS)
 @pytest.mark.parametrize("mk", [(128, 64), (128, 1024), (256, 333)])
 def test_quantize_rows_vs_ref(fmt, mk):
