@@ -1,0 +1,83 @@
+"""CI benchmark-regression gate.
+
+Compares a ``benchmarks/run.py --smoke --json`` dump against the
+checked-in `benchmarks/baseline.json` and exits non-zero on regression.
+
+Two kinds of checks, both over the ``key=<float>x`` metrics a row's
+derived string carries:
+
+  value+rtol : deterministic quantities (operand / KV-cache bytes-moved
+               reductions) — tight, these are modeled bytes, not wall
+               clock, so any drift is a real contract change.
+  min / max  : sanity tripwires on CPU wall-clock *ratios* (DPA kernel vs
+               f32 kernel) — deliberately loose; CI machines are noisy,
+               but a 20x blowup means someone broke the kernel path.
+
+Usage: python benchmarks/check_regression.py bench.json \
+           [--baseline benchmarks/baseline.json]
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+
+def load_rows(path: str) -> dict:
+    with open(path) as f:
+        rows = json.load(f)
+    return {r["name"]: r for r in rows}
+
+
+def check(current: dict, baseline: dict) -> list:
+    failures = []
+    for name, spec in baseline["metrics"].items():
+        row = current.get(name)
+        if row is None:
+            failures.append(f"{name}: missing from benchmark output")
+            continue
+        key = spec["key"]
+        got = row.get("metrics", {}).get(key)
+        if got is None:
+            failures.append(f"{name}: derived metric {key!r} not reported "
+                            f"(derived={row.get('derived')!r})")
+            continue
+        if "value" in spec:
+            want, rtol = spec["value"], spec.get("rtol", 0.05)
+            if abs(got - want) > rtol * abs(want):
+                failures.append(f"{name}: {key}={got:.3f} drifted from "
+                                f"baseline {want:.3f} (rtol {rtol})")
+        if "min" in spec and got < spec["min"]:
+            failures.append(f"{name}: {key}={got:.3f} < floor {spec['min']}")
+        if "max" in spec and got > spec["max"]:
+            failures.append(f"{name}: {key}={got:.3f} > ceiling "
+                            f"{spec['max']}")
+    return failures
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv:
+        print(__doc__)
+        return 2
+    cur_path = argv[0]
+    base_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baseline.json")
+    if "--baseline" in argv:
+        base_path = argv[argv.index("--baseline") + 1]
+    current = load_rows(cur_path)
+    with open(base_path) as f:
+        baseline = json.load(f)
+    failures = check(current, baseline)
+    n = len(baseline["metrics"])
+    if failures:
+        print(f"benchmark regression gate: {len(failures)}/{n} FAILED")
+        for f_ in failures:
+            print(f"  FAIL {f_}")
+        return 1
+    print(f"benchmark regression gate: {n} metrics within tolerance")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

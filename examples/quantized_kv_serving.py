@@ -1,0 +1,71 @@
+"""Quantized-KV serving walkthrough: the DPA attention path end to end.
+
+Serves a reduced qwen3-4b under three policies — the seed f32 datapath,
+fp8 DPA attention (attn_fp8_dpa), and the trans-precision sweet spot
+kv4_attn8_packed (fp8 attention arithmetic over a packed-fp4 KV cache) —
+and shows the three claims that make the path production-shaped:
+
+  1. the KV cache shrinks 3.9x / 7.5x (bytes streamed per decode step);
+  2. greedy generations track the f32 path (same weights, narrower
+     attention operands);
+  3. prefill-then-decode is self-consistent: the cache a prompt writes is
+     the cache decode reads, codes and scales included.
+
+Run: PYTHONPATH=src python examples/quantized_kv_serving.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.core.kvcache import is_quantized, kv_cache_nbytes
+from repro.core.policy import get_policy
+from repro.launch.serve import generate, report_kv_cache
+from repro.models import build_model
+
+
+def main():
+    base = reduce_config(get_config("qwen3-4b"))
+    B, S0, GEN = 2, 12, 8
+    prompt = jax.random.randint(jax.random.PRNGKey(1), (B, S0), 0,
+                                base.vocab_size)
+
+    outs = {}
+    for pol in ("fp32", "attn_fp8_dpa", "kv4_attn8_packed"):
+        cfg = base.replace(policy=pol)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))   # same weights each run
+        print(f"\n=== policy {pol} ===")
+        print(report_kv_cache(cfg, B, S0 + GEN))
+        caches = model.init_caches(B, S0 + GEN)
+        leaf = jax.tree.leaves(caches, is_leaf=is_quantized)[0]
+        print("cache layout:", "codes+scales (quantized)"
+              if is_quantized(leaf) else "raw k/v")
+        toks = generate(model, params, prompt, GEN, S0 + GEN)
+        outs[pol] = np.asarray(toks)
+        print("greedy tokens:", outs[pol][0, S0:].tolist())
+
+    agree8 = (outs["fp32"][:, S0:] == outs["attn_fp8_dpa"][:, S0:]).mean()
+    agree4 = (outs["fp32"][:, S0:] == outs["kv4_attn8_packed"][:, S0:]).mean()
+    print(f"\ngreedy agreement vs f32: attn_fp8_dpa {agree8:.0%}, "
+          f"kv4_attn8_packed {agree4:.0%} "
+          "(random init -> flat logits; trained weights agree far more)")
+
+    # the bandwidth table the policies buy, at a serving-scale shape
+    print("\nKV-cache bytes per decode sweep (B=8, S=4096, KV=8, hd=128):")
+    for pol in ("attn_fp16_dpa", "attn_fp8_dpa", "kv4_attn8_packed"):
+        p = get_policy(pol)
+        nb = kv_cache_nbytes(8, 4096, 8, 128, fmt=p.fmt_kv,
+                             packed=p.kv_packed)
+        print(f"  {pol:18s} {nb['total'] / 2**20:8.1f} MiB  "
+              f"({nb['reduction_vs_f32']:.2f}x fewer than f32's "
+              f"{nb['f32_total'] / 2**20:.1f} MiB)")
+
+
+if __name__ == "__main__":
+    main()

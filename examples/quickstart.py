@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 # --- 1. the FPU: 4-term FP8 dot product accumulated into FP32 -----------
-from repro.core import dpa, formats as F
+from repro.core import dpa
 
 a = np.array([[1.5, -2.0, 0.25, 3.0]])
 b = np.array([[2.0, 0.5, -4.0, 1.0]])

@@ -36,7 +36,7 @@ jax.config.update("jax_enable_x64", True)
 
 import jax.numpy as jnp  # noqa: E402
 
-from .formats import (FP16, FP32, FloatFormat, decode, encode_from_parts,  # noqa: E402
+from .formats import (FP32, FloatFormat, decode, encode_from_parts,  # noqa: E402
                       get_format, inf_code, nan_code)
 
 # Number of 32-bit limbs in the wide accumulator (little-endian digits held

@@ -1,0 +1,138 @@
+"""Quantized KV-cache layer: format-width storage for decode attention.
+
+Serving cost on long contexts is dominated by streaming the KV cache every
+decode step; the paper's format-width I/O contract applies directly — a
+cache held at operand width moves 2x/4x (fp16/fp8) or ~8x (packed fp4,
+two E2M1 codes per byte via `core.packing`) fewer bytes than the seed f32
+cache.  This module owns the storage layout; the *compute* contract (DPA
+f32 accumulation for QK^T/PV over the dequantized-in-prologue operands)
+lives in `kernels.flash_attention` / `models.decode_attn`.
+
+Layout — one entry per (batch, position, kv-head) row of head_dim values:
+
+  k_codes / v_codes : (B, S, KV, hd)  native narrow dtype (fp16/bf16/fp8),
+                      or uint8 E2M1 codes for fp4 — (B, S, KV, hd // 2)
+                      packed bytes when `packed` (low nibble = even index).
+  k_scale / v_scale : (B, S, KV, 1) f32 per-row absmax scales — the
+                      software exponent path; dequant = widen(codes) * scale.
+
+The quantization recipe is exactly `core.quantize.quant_rows_grid` over the
+head_dim axis, so a cache round-trip is bit-identical to the fake-quant the
+attention reference applies to raw K/V — prefill (raw operands) and decode
+(cached operands) see the same numbers.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .formats import get_format
+from .packing import operand_nbytes, pack_fp4, unpack_fp4
+from .quantize import decode_fp4, encode_fp4, jnp_dtype, quant_rows_grid
+
+QUANT_KEYS = ("k_codes", "k_scale", "v_codes", "v_scale")
+
+
+def is_quantized(cache) -> bool:
+    """True for the quantized layout ({k,v}_codes/{k,v}_scale pytree)."""
+    return isinstance(cache, dict) and "k_codes" in cache
+
+
+def _codes_dtype(fmt):
+    fmt = get_format(fmt)
+    return jnp.uint8 if fmt.name == "fp4_e2m1" else jnp_dtype(fmt)
+
+
+def _codes_width(hd: int, fmt, packed: bool) -> int:
+    fmt = get_format(fmt)
+    if fmt.name == "fp4_e2m1" and packed:
+        if hd % 2:
+            raise ValueError(f"packed fp4 KV needs an even head_dim, got {hd}")
+        return hd // 2
+    return hd
+
+
+def quantize_kv(x, *, fmt, packed: bool = False):
+    """(..., hd) raw K or V -> (codes, scale) in the cache layout.
+
+    Per-row absmax over the trailing head_dim axis; codes are the format's
+    storage representation (native dtype, or E2M1 nibbles — packed two per
+    byte along hd when `packed`).  Built ON `quant_rows_grid` — not a
+    re-implementation — so the cache recipe cannot drift from the one the
+    attention kernels/oracles use: re-encoding exact grid values is a
+    bit-exact round trip."""
+    fmt = get_format(fmt)
+    grid, scale = quant_rows_grid(x, fmt)
+    if fmt.name == "fp4_e2m1":
+        codes = encode_fp4(grid)
+        if packed:
+            codes = pack_fp4(codes)
+    else:
+        codes = grid.astype(jnp_dtype(fmt))
+    return codes, scale
+
+
+def dequantize_kv(codes, scale, *, fmt, packed: bool = False):
+    """Cache rows -> f32 values: widen(codes) * scale (dequant-in-prologue
+    semantics; identical to `quant_rows_grid(x)[0] * scale` of the raw
+    tensor, so the cached path reproduces the fake-quant path bit-for-bit)."""
+    fmt = get_format(fmt)
+    if fmt.name == "fp4_e2m1":
+        c = unpack_fp4(codes) if packed else codes
+        grid = decode_fp4(c)
+    else:
+        grid = codes.astype(jnp.float32)
+    return grid * scale
+
+
+def init_kv_cache(batch: int, s_ctx: int, n_kv: int, hd: int, *, fmt,
+                  packed: bool = False):
+    """Zeroed quantized cache pytree for a full-context decode cache."""
+    wc = _codes_width(hd, fmt, packed)
+    codes = jnp.zeros((batch, s_ctx, n_kv, wc), _codes_dtype(fmt))
+    scale = jnp.zeros((batch, s_ctx, n_kv, 1), jnp.float32)
+    return {"k_codes": codes, "k_scale": scale,
+            "v_codes": codes, "v_scale": scale}
+
+
+def update_kv_cache(cache, k_new, v_new, offset, *, fmt,
+                    packed: bool = False):
+    """Quantize k/v (B, S_new, KV, hd) and write them at `offset` along the
+    sequence axis.  Returns the new cache pytree."""
+    kc, ks = quantize_kv(k_new, fmt=fmt, packed=packed)
+    vc, vs = quantize_kv(v_new, fmt=fmt, packed=packed)
+    z = jnp.zeros((), jnp.int32)
+    off = jnp.asarray(offset, jnp.int32)
+    at = (z, off, z, z)
+    return {
+        "k_codes": jax.lax.dynamic_update_slice(cache["k_codes"], kc, at),
+        "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks, at),
+        "v_codes": jax.lax.dynamic_update_slice(cache["v_codes"], vc, at),
+        "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs, at),
+    }
+
+
+def dequantize_cache(cache, *, fmt, packed: bool = False):
+    """-> (k, v) f32 (B, S, KV, hd) — the prologue widening, as one op."""
+    k = dequantize_kv(cache["k_codes"], cache["k_scale"], fmt=fmt,
+                      packed=packed)
+    v = dequantize_kv(cache["v_codes"], cache["v_scale"], fmt=fmt,
+                      packed=packed)
+    return k, v
+
+
+def kv_cache_nbytes(batch: int, s_ctx: int, n_kv: int, hd: int, *, fmt,
+                    packed: bool = False) -> dict:
+    """Bytes one layer's K+V cache moves through the interface per full
+    sweep (codes + f32 scales), vs the seed f32 cache, and the reduction.
+
+    This is the decode-attention bandwidth story: every generated token
+    streams the whole cache, so the reduction here is the per-token HBM
+    saving (≈8x for packed fp4 at hd=128, ≈7x at hd=64 — the scale row
+    amortizes over head_dim)."""
+    n_rows = batch * s_ctx * n_kv
+    code_b = operand_nbytes(n_rows * hd, fmt, packed=packed)
+    total = 2 * (code_b + 4 * n_rows)          # K and V, codes + scales
+    f32 = 2 * 4 * n_rows * hd
+    return {"total": total, "f32_total": f32,
+            "reduction_vs_f32": f32 / total}

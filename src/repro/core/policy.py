@@ -33,6 +33,14 @@ class TransPrecisionPolicy:
     fused_quant: quantize activations *inside* the matmul kernel prologue
     (per-(row, K-block) absmax scales folded into the accumulation) instead
     of a separate XLA pass — no quantized-activation HBM round-trip.
+    fmt_attn: operand format for the attention matmuls (QK^T and PV both
+    accumulate in f32 over fmt_attn operands; the online-softmax running
+    max/sum stay f32).  "fp32" leaves attention on the seed datapath.
+    fmt_kv: storage format of the KV cache ("fp32" = raw compute-dtype
+    cache).  K/V are dequantized in the kernel prologue, so a narrow cache
+    trades per-row scales for 2x/4x/~8x fewer cache bytes per decode step.
+    kv_packed: pack fp4 KV codes two per byte along head_dim
+    (`core.packing` nibble layout — bit-identical to unpacked).
     """
     fmt_weights: str = "fp32"
     fmt_acts: str = "fp32"
@@ -43,9 +51,13 @@ class TransPrecisionPolicy:
     use_kernel: bool = False
     packed: bool = False
     fused_quant: bool = False
+    fmt_attn: str = "fp32"
+    fmt_kv: str = "fp32"
+    kv_packed: bool = False
 
     def __post_init__(self):
         get_format(self.fmt_weights), get_format(self.fmt_acts)
+        get_format(self.fmt_attn), get_format(self.fmt_kv)
         if get_format(self.accum).name not in ("fp32", "fp16"):
             raise ValueError("TransDot accumulates into FP32 or FP16")
         if self.fused_quant and not self.use_kernel:
@@ -57,10 +69,22 @@ class TransPrecisionPolicy:
         if self.packed and not (get_format(self.fmt_weights).bits == 4
                                 or get_format(self.fmt_acts).bits == 4):
             raise ValueError("packed storage needs a 4-bit operand format")
+        if self.kv_packed and get_format(self.fmt_kv).bits != 4:
+            raise ValueError("kv_packed needs a 4-bit fmt_kv")
 
     @property
     def enabled(self) -> bool:
         return not (self.fmt_weights == "fp32" and self.fmt_acts == "fp32")
+
+    @property
+    def attn_enabled(self) -> bool:
+        """True when attention runs the DPA path (quantized operands
+        and/or a quantized KV cache)."""
+        return not (self.fmt_attn == "fp32" and self.fmt_kv == "fp32")
+
+    @property
+    def kv_quantized(self) -> bool:
+        return self.fmt_kv != "fp32"
 
     @property
     def dpa_terms(self) -> int:
@@ -94,6 +118,29 @@ POLICIES = {
     "w4a8_packed": TransPrecisionPolicy("fp4_e2m1", "fp8_e4m3",
                                         use_kernel=True, packed=True,
                                         fused_quant=True),
+    # DPA-quantized attention: QK^T / PV accumulate f32 over narrow
+    # operands; fmt_kv holds the cache at format width (decode bandwidth)
+    "attn_fp16_dpa": TransPrecisionPolicy(fmt_attn="fp16", fmt_kv="fp16"),
+    "attn_fp8_dpa": TransPrecisionPolicy(fmt_attn="fp8_e4m3",
+                                         fmt_kv="fp8_e4m3"),
+    "attn_fp4_packed": TransPrecisionPolicy(fmt_attn="fp4_e2m1",
+                                            fmt_kv="fp4_e2m1",
+                                            kv_packed=True),
+    # trans-precision serving sweet spot: fp8 attention arithmetic over a
+    # packed-fp4 cache (the w4a8 idea applied to attention operands)
+    "kv4_attn8_packed": TransPrecisionPolicy(fmt_attn="fp8_e4m3",
+                                             fmt_kv="fp4_e2m1",
+                                             kv_packed=True),
+    # cache-only compression: attention arithmetic stays f32
+    "kv8_attn_f32": TransPrecisionPolicy(fmt_kv="fp8_e4m3"),
+    # full serving path: packed-fp4 weights + fused fp8 activations on the
+    # linears, fp8 DPA attention, packed-fp4 KV cache
+    "w4a8_kv4_attn8": TransPrecisionPolicy("fp4_e2m1", "fp8_e4m3",
+                                           use_kernel=True, packed=True,
+                                           fused_quant=True,
+                                           fmt_attn="fp8_e4m3",
+                                           fmt_kv="fp4_e2m1",
+                                           kv_packed=True),
 }
 
 

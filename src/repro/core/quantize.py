@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import ml_dtypes
 
-from .formats import FloatFormat, get_format
+from .formats import get_format
 
 
 def _probe_dtype(dt):
@@ -104,6 +104,31 @@ def absmax_block_scale(xb, target: float, *, axis=1):
     drift)."""
     amax = jnp.max(jnp.abs(xb), axis=axis, keepdims=True)
     return jnp.maximum(jnp.maximum(amax, 1e-30) / target, 2.0 ** -126)
+
+
+def quant_rows_grid(x, fmt, *, axis=-1):
+    """Absmax-quantize along `axis` onto fmt's value grid.
+
+    -> (values-on-the-grid f32, f32 scale with `axis` kept) such that
+    grid * scale is the dequantized tensor.  This is the operand recipe the
+    DPA attention path shares between the Pallas kernels, the jnp fallback,
+    the quantized KV cache, and the `kernels.ref` oracles — one definition
+    so their bit contract cannot drift.  fmt "fp32" is the identity
+    (grid = x, scale = 1): the disabled-path contract of the attention ops.
+    """
+    fmt = get_format(fmt)
+    xf = x.astype(jnp.float32)
+    if fmt.name == "fp32":
+        return xf, jnp.ones(jnp.max(xf, axis=axis, keepdims=True).shape,
+                            jnp.float32)
+    target = fmt.quant_target
+    scale = absmax_block_scale(xf, target, axis=axis)
+    y = jnp.clip(xf / scale, -target, target)
+    if fmt.name == "fp4_e2m1":
+        grid = decode_fp4(encode_fp4(y))
+    else:
+        grid = y.astype(jnp_dtype(fmt)).astype(jnp.float32)
+    return grid, scale
 
 
 def compute_scale(x, fmt, *, axis=None, keepdims=True, eps=1e-30):

@@ -198,8 +198,12 @@ def batch_spec(batch_tree, mesh: Mesh):
 
 def cache_spec(cache_tree, mesh: Mesh):
     """KV caches (B, S, KV, hd): batch on DP, sequence on "model".
+    Quantized caches shard the same way — codes AND their per-row scales
+    (B, S, KV, 1/hd[/2]) carry the sequence on axis 1, and they must move
+    together or a shard would hold codes it cannot dequantize.
     Recurrent states (B, feats...): batch on DP, features replicated."""
     da = data_axes(mesh)
+    kv_leaves = ("k", "v", "k_codes", "v_codes", "k_scale", "v_scale")
 
     def spec_of(path, leaf):
         names = _path_names(path)
@@ -207,7 +211,7 @@ def cache_spec(cache_tree, mesh: Mesh):
         if nd == 0:
             return NamedSharding(mesh, P())
         lead = 1 if "groups" in names else 0
-        if names and names[-1] in ("k", "v") and nd - lead == 4:
+        if names and names[-1] in kv_leaves and nd - lead == 4:
             spec = [None] * lead + [da, "model", None, None]
         else:
             spec = [None] * lead + [da] + [None] * (nd - lead - 1)

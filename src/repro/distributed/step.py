@@ -8,9 +8,6 @@ logits for a 150k vocab dominate activation memory at 4k seq).
 """
 from __future__ import annotations
 
-import functools
-from typing import Optional
-
 import jax
 import jax.numpy as jnp
 

@@ -7,9 +7,7 @@ area for speed).  All anchor constants come from §III-A/§III-B.
 """
 from __future__ import annotations
 
-import math
-
-from .area import barrel_shifter_muxes, multilane_overhead, reconfig_overhead
+from .area import barrel_shifter_muxes
 
 
 def _curve_factor(delay, d_min, *, steep=2.0):

@@ -1,4 +1,4 @@
-"""Pallas TPU kernel: blocked online-softmax attention (forward).
+"""Pallas TPU kernels: blocked online-softmax attention (forward).
 
 Used by the long-context configs (prefill) where materializing S x S
 logits is the memory-roofline killer.  Standard FlashAttention tiling
@@ -7,6 +7,20 @@ adapted to TPU VMEM: q tiles of (bq, D) stay resident; k/v stream in
 scratch.  GQA is handled in the index maps (q-head block -> kv-head
 block via integer division), so grouped heads never duplicate KV in HBM
 — the same "narrow wires, wide accumulator" economics as the DPA GEMM.
+
+Two entry points:
+
+  flash_attention     : the seed f32 datapath.
+  dpa_flash_attention : both attention matmuls run the DPA contract —
+      QK^T and PV accumulate in f32 over operands quantized to a Table-I
+      mode (fp16/bf16 2-term, fp8 4-term, fp4 8-term), while the online
+      softmax (running max / denominator / alpha rescales) stays entirely
+      f32.  K/V either arrive raw (quantized per-row in the prologue) or
+      as quantized KV-cache rows — codes + per-row f32 scales, fp4
+      optionally nibble-packed along head_dim (`core.packing` layout, so
+      the BlockSpec moves half the cache bytes) — and are *dequantized in
+      the prologue* (widen(codes) * scale).  Semantic spec:
+      `ref.dpa_flash_attention_ref`.
 
 Supports causal and sliding-window (RecurrentGemma local attention)
 masks.  Forward only: training configs use XLA attention + remat; the
@@ -21,6 +35,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.core.packing import unpack_fp4
+from repro.core.quantize import decode_fp4, quant_rows_grid
 from repro.kernels._compat import CompilerParams as _CompilerParams
 
 _NEG_INF = -1e30
@@ -104,4 +120,144 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(qr, kr, vr)
+    return out.reshape(B, H, Sq, D)
+
+
+# -----------------------------------------------------------------------------
+# DPA-quantized attention: QK^T and PV accumulate f32 over narrow operands
+# -----------------------------------------------------------------------------
+
+def _widen_kv(codes, fmt_kv: str, packed: bool):
+    """Cache codes -> f32 grid values (the prologue widening): native
+    narrow dtypes cast up; fp4 E2M1 codes decode arithmetically, after a
+    nibble unpack along head_dim when `packed`."""
+    if fmt_kv == "fp4_e2m1":
+        if packed:
+            codes = unpack_fp4(codes)
+        return decode_fp4(codes)
+    return codes.astype(jnp.float32)
+
+
+def _dpa_flash_kernel(*refs, n_k: int, scale: float, causal: bool, window,
+                      bq: int, bk: int, sq: int, sk: int, fmt: str,
+                      fmt_kv: str, kv_quant: bool, kv_packed: bool):
+    if kv_quant:
+        (q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+         m_ref, l_ref, acc_ref) = refs
+    else:
+        q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref = refs
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # prologue: quantize q onto fmt's grid (scale rides the epilogue of the
+    # QK^T partial product); widen K/V to their dequantized values — from
+    # cache codes * stored scales, or via in-block per-row quantization
+    qg, qs = quant_rows_grid(q_ref[0], fmt)            # (bq, D), (bq, 1)
+    if kv_quant:
+        k_eff = _widen_kv(k_ref[0], fmt_kv, kv_packed) * ks_ref[0]
+        v_eff = _widen_kv(v_ref[0], fmt_kv, kv_packed) * vs_ref[0]
+    else:
+        kg, ks = quant_rows_grid(k_ref[0], fmt_kv)
+        vg, vs = quant_rows_grid(v_ref[0], fmt_kv)
+        k_eff, v_eff = kg * ks, vg * vs
+
+    # DPA matmul #1: narrow q x widened K, f32 accumulate, row scale after
+    s = jnp.dot(qg, k_eff.T, preferred_element_type=jnp.float32) * qs * scale
+
+    i = pl.program_id(1)
+    qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0) \
+        + (sk - sq)
+    kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = jnp.ones((bq, bk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, _NEG_INF)
+
+    # online softmax: running max / denominator / rescales all f32
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_cur)
+    alpha = jnp.exp(m_prev - m_cur)
+    # DPA matmul #2: probabilities quantized per (row, k-block) onto fmt's
+    # grid; their scale folds into BOTH the f32 PV accumulation and the
+    # f32 denominator, so numerator and normalizer see the same grid
+    pg, ps = quant_rows_grid(p, fmt)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(pg, axis=1, keepdims=True) * ps
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(
+        pg, v_eff, preferred_element_type=jnp.float32) * ps
+    m_ref[...] = m_cur
+
+    @pl.when(j == n_k - 1)
+    def _store():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "fmt", "fmt_kv", "kv_quant", "kv_packed", "causal", "window", "scale",
+    "bq", "bk", "interpret"))
+def dpa_flash_attention(q, k, v, k_scale=None, v_scale=None, *, fmt: str,
+                        fmt_kv: str | None = None, kv_quant: bool = False,
+                        kv_packed: bool = False, causal: bool = True,
+                        window=None, scale=None, bq: int = 128,
+                        bk: int = 128, interpret: bool = True):
+    """(B,H,Sq,D) x (B,Hkv,Sk,Dk) x (B,Hkv,Sk,Dk) -> (B,H,Sq,D).
+
+    Raw path (kv_quant=False): k/v are float tensors, quantized per-row
+    onto fmt_kv's grid in the kernel prologue.  Cache path (kv_quant=True):
+    k/v are quantized KV-cache rows — native narrow dtype or uint8 E2M1
+    codes (Dk = D // 2 packed bytes when kv_packed) — with per-row f32
+    scales k_scale/v_scale (B,Hkv,Sk,1).  Both paths see bit-identical
+    K/V values; the cache path just moves 2-8x fewer bytes HBM->VMEM.
+    """
+    B, H, Sq, D = q.shape
+    _, Hkv, Sk, _ = k.shape
+    g = H // Hkv
+    fmt_kv = fmt_kv or fmt
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    scale_v = float(scale if scale is not None else D ** -0.5)
+    dk = D // 2 if (kv_quant and kv_packed) else D
+
+    qr = q.reshape(B * H, Sq, D)
+    kr = k.reshape(B * Hkv, Sk, dk)
+    vr = v.reshape(B * Hkv, Sk, dk)
+    kernel = functools.partial(
+        _dpa_flash_kernel, n_k=Sk // bk, scale=scale_v, causal=causal,
+        window=window, bq=bq, bk=bk, sq=Sq, sk=Sk, fmt=fmt, fmt_kv=fmt_kv,
+        kv_quant=kv_quant, kv_packed=kv_packed)
+    in_specs = [
+        pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        pl.BlockSpec((1, bk, dk), lambda b, i, j, g=g: (b // g, j, 0)),
+        pl.BlockSpec((1, bk, dk), lambda b, i, j, g=g: (b // g, j, 0)),
+    ]
+    operands = [qr, kr, vr]
+    if kv_quant:
+        in_specs += [
+            pl.BlockSpec((1, bk, 1), lambda b, i, j, g=g: (b // g, j, 0)),
+            pl.BlockSpec((1, bk, 1), lambda b, i, j, g=g: (b // g, j, 0)),
+        ]
+        operands += [k_scale.reshape(B * Hkv, Sk, 1),
+                     v_scale.reshape(B * Hkv, Sk, 1)]
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, Sq // bq, Sk // bk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, D), q.dtype),
+        scratch_shapes=[pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, 1), jnp.float32),
+                        pltpu.VMEM((bq, D), jnp.float32)],
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(*operands)
     return out.reshape(B, H, Sq, D)

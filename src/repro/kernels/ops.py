@@ -120,3 +120,17 @@ def flash_attention(q, k, v, *, causal=True, window=None, scale=None,
     return _fa.flash_attention(q, k, v, causal=causal, window=window,
                                scale=scale, bq=bq, bk=bk,
                                interpret=INTERPRET)
+
+
+def dpa_flash_attention(q, k, v, *, fmt, fmt_kv=None, causal=True,
+                        window=None, scale=None, bq=128, bk=128):
+    """DPA-quantized flash attention over raw (B,H,S,D) operands: q and
+    the softmax probabilities quantize onto fmt's grid in the kernel,
+    K/V onto fmt_kv's (default fmt); accumulation and the online softmax
+    stay f32.  See `flash_attention.dpa_flash_attention` for the
+    quantized-KV-cache entry point (codes + scales in, fewer bytes moved).
+    """
+    return _fa.dpa_flash_attention(q, k, v, fmt=fmt, fmt_kv=fmt_kv,
+                                   causal=causal, window=window,
+                                   scale=scale, bq=bq, bk=bk,
+                                   interpret=INTERPRET)

@@ -128,7 +128,6 @@ def cell_hbm_bytes_per_device(cfg: ModelConfig, seq: int, batch: int,
     serve_b = 1 if cfg.serve_quant else act_b
     # serving: tp_only replicates params across DP — per-device weight
     # reads cover the model-shard, fsdp covers 1/n_chips then gathers
-    from repro.launch.mesh import make_production_mesh  # axis sizes
     model_shard = 16 if cfg.serve_param_mode == "tp_only" else n_chips
     if kind == "prefill":
         wread = n_params * serve_b / model_shard

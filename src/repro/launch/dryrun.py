@@ -31,7 +31,7 @@ import traceback
 
 import jax
 
-from repro.configs import SHAPES, cell_applicable, get_config, list_archs
+from repro.configs import SHAPES, cell_applicable, list_archs
 from repro.distributed import sharding as shd
 from repro.distributed.step import (make_prefill_step, make_serve_step,
                                     make_train_step)

@@ -15,7 +15,6 @@ are kept so EXPERIMENTS.md can show the schedule, not just the sum.
 """
 from __future__ import annotations
 
-import math
 import re
 from collections import defaultdict
 

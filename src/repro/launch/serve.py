@@ -2,10 +2,14 @@
 
 Demonstrates the inference side of the DPA contract: weights quantized to
 the policy format ride the narrow wires (HBM), activations quantize
-per-row, accumulation stays FP32.
+per-row, accumulation stays FP32.  Attention policies (attn_fp8_dpa,
+kv4_attn8_packed, ...) extend the contract to the serving hot path: both
+attention matmuls accumulate f32 over narrow operands and the KV cache is
+stored at format width, so every decode step streams 2-8x fewer cache
+bytes.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
-      --batch 4 --prompt-len 32 --gen 16 --policy fp8_dpa
+      --batch 4 --prompt-len 32 --gen 16 --policy kv4_attn8_packed
 """
 from __future__ import annotations
 
@@ -16,9 +20,33 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_config
+from repro.core.policy import get_policy
 from repro.distributed.step import make_serve_step
 from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
+
+
+def report_kv_cache(cfg, batch: int, s_ctx: int) -> str:
+    """One-line KV-cache footprint for the selected policy."""
+    pol = get_policy(cfg.policy)
+    if not pol.kv_quantized:
+        return "kv-cache: raw %s (policy %s)" % (cfg.dtype, cfg.policy)
+    from repro.core.kvcache import kv_cache_nbytes
+    nb = kv_cache_nbytes(batch, s_ctx, cfg.n_kv_heads, cfg.hd,
+                         fmt=pol.fmt_kv, packed=pol.kv_packed)
+    n_attn = sum(1 for i in range(cfg.n_layers)
+                 if _pattern_kind(cfg, i) in ("attn", "dec"))
+    return (f"kv-cache: {pol.fmt_kv}{' packed' if pol.kv_packed else ''} "
+            f"{nb['total'] * n_attn / 1e6:.2f} MB vs f32 "
+            f"{nb['f32_total'] * n_attn / 1e6:.2f} MB "
+            f"({nb['reduction_vs_f32']:.2f}x fewer bytes/decode-step, "
+            f"{n_attn} attn layers)")
+
+
+def _pattern_kind(cfg, layer: int) -> str:
+    from repro.models.transformer import family_pattern
+    pat = family_pattern(cfg)
+    return pat[layer % len(pat)]
 
 
 def generate(model, params, prompt, n_gen: int, s_ctx: int):
@@ -59,6 +87,7 @@ def main(argv=None):
     if cfg.family in ("encdec", "vlm") or cfg.frontend == "stub":
         raise SystemExit("serve demo targets token-in/token-out archs")
     model = build_model(cfg)
+    print(report_kv_cache(cfg, args.batch, args.prompt_len + args.gen))
     mesh = make_host_mesh(n_model=args.n_model)
     with mesh:
         params = model.init(jax.random.PRNGKey(0))

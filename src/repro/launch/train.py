@@ -14,7 +14,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, reduce_config
 from repro.data.pipeline import DataConfig, make_pipeline

@@ -54,6 +54,10 @@ class ModelConfig:
     serve_param_mode: str = "fsdp"   # "fsdp" | "tp_only" (serve replication)
     serve_quant: str = ""            # "" | "fp8_e4m3" weight-only storage
     flash_decode: bool = False       # shard_map partial-softmax decode
+                                     # (raw caches only: with a
+                                     # kv-quantized policy, decode takes
+                                     # the DPA quantized-cache path and
+                                     # this flag is ignored)
     remat_block: int = 0             # two-level remat: outer scan saves x
                                      # every `remat_block` groups (sqrt-L
                                      # activation memory)

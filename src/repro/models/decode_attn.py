@@ -1,4 +1,23 @@
-"""Sharded flash-decoding: shard-local KV-cache update + partial softmax.
+"""Decode-side attention: DPA-quantized paths + sharded flash-decoding.
+
+DPA attention (`dpa_attention` / `dpa_decode_attn`)
+---------------------------------------------------
+The jnp face of the DPA attention contract (kernel face:
+`repro.kernels.flash_attention.dpa_flash_attention`; spec:
+`repro.kernels.ref.dpa_flash_attention_ref`): QK^T and PV accumulate in
+f32 over operands absmax-quantized onto a Table-I format grid, and the
+softmax max/denominator stay f32.  These run under plain XLA, so they
+serve every shape the Pallas kernel's block constraints exclude (and all
+decode steps, where Sq == 1).  They define the *semantics* of the path;
+the *bandwidth* claim belongs to the kernel's kv_quant mode, whose
+BlockSpec moves cache codes+scales HBM->VMEM and widens in the prologue
+— here the dequantized K/V is an ordinary XLA f32 intermediate (the HBM
+saving on the XLA path is the cache's at-rest footprint, not the
+per-step traffic).
+
+Sharded flash-decoding (`flash_decode`)
+---------------------------------------
+Shard-local KV-cache update + partial softmax.
 
 Auto-SPMD cannot see that a decode step's cache update touches one
 sequence shard, nor that attention against a sequence-sharded cache only
@@ -23,6 +42,69 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+
+from repro.core.quantize import quant_rows_grid
+
+
+def dpa_attention(q, k, v, mask, *, fmt: str, fmt_kv=None, scale,
+                  kv_on_grid: bool = False):
+    """DPA attention over grouped K/V (XLA path, any shape).
+
+    q: (B,Sq,H,hd); k/v: (B,Skv,KV,hd) with H a multiple of KV; mask
+    broadcastable to (B,H,Sq,Skv).  With `kv_on_grid`, k/v already carry
+    dequantized KV-cache values (grid * scale) and are consumed as-is;
+    otherwise they are per-row quantized onto fmt_kv's grid here
+    (bit-identical to a cache round-trip, so prefill and decode agree).
+    Quantization happens *before* the GQA expansion — repeated heads
+    share a row's scale, so expanding first would just redo identical
+    absmax/encode work g times.  Matches `ref.dpa_flash_attention_ref`
+    with a single key block (global max).
+    """
+    B, Sq, H, hd = q.shape
+    g = H // k.shape[2]
+    qg, qs = quant_rows_grid(q, fmt)                   # (B,Sq,H,hd/1)
+    if kv_on_grid:
+        k_eff = k.astype(jnp.float32)
+        v_eff = v.astype(jnp.float32)
+    else:
+        kf = fmt_kv or fmt
+        kg, ks = quant_rows_grid(k, kf)
+        vg, vs = quant_rows_grid(v, kf)
+        k_eff, v_eff = kg * ks, vg * vs
+    if g > 1:
+        k_eff = jnp.repeat(k_eff, g, axis=2)           # (B,Skv,H,hd)
+        v_eff = jnp.repeat(v_eff, g, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", qg, k_eff,
+                        preferred_element_type=jnp.float32)
+    logits = logits * qs.transpose(0, 2, 1, 3) * scale
+    logits = jnp.where(mask, logits, -1e30)
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    p = jnp.exp(logits - m)                            # f32 softmax core
+    pg, ps = quant_rows_grid(p, fmt)
+    den = jnp.sum(pg, axis=-1, keepdims=True) * ps     # f32 denominator
+    num = jnp.einsum("bhst,bthd->bshd", pg, v_eff,
+                     preferred_element_type=jnp.float32)
+    num = num * ps.transpose(0, 2, 1, 3)
+    out = num / jnp.maximum(den, 1e-30).transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def dpa_decode_attn(q, cache, offset, *, fmt: str, fmt_kv: str,
+                    kv_packed: bool, scale):
+    """One decode step against a quantized KV cache.
+
+    q: (B,1,H,hd) (already rope'd); cache: `repro.core.kvcache` pytree
+    (B,S_ctx,KV,...).  The cache rows are widened in the prologue
+    (codes * per-row scale) and both matmuls accumulate f32 over
+    fmt-grid operands; causal masking via `offset`.
+    """
+    from repro.core.kvcache import dequantize_cache
+    k, v = dequantize_cache(cache, fmt=fmt_kv, packed=kv_packed)
+    s_ctx = k.shape[1]
+    valid = jnp.arange(s_ctx) <= jnp.asarray(offset, jnp.int32)
+    mask = valid[None, None, None, :]
+    return dpa_attention(q, k, v, mask, fmt=fmt, scale=scale,
+                         kv_on_grid=True)
 
 
 def _local_update(cache, new, offset, axis_name):

@@ -8,7 +8,6 @@ pytree, apply_* consumes it.  Decode paths carry explicit caches/states.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -79,22 +78,35 @@ def init_attention(key, cfg):
 
 
 def _sdpa(q, k, v, *, causal, window, offset, valid=None, use_flash=False,
-          q_chunk=0):
+          q_chunk=0, policy=None, kv_on_grid=False):
     """q: (B,Sq,H,hd); k/v: (B,Skv,KV,hd) -> (B,Sq,H,hd).
 
     offset: index of q position 0 within the kv timeline.
     valid: optional (Skv,) bool — extra key-slot mask (sliding caches).
     q_chunk: scan over query blocks so the (Sq,Skv) score matrix never
     materializes whole — the XLA-native flash-attention memory shape.
+    policy: when its attention bits are set, QK^T and PV run the DPA
+    contract (f32 accumulation over fmt_attn-grid operands, f32 softmax
+    core) via the Pallas kernel or the jnp fallback.
+    kv_on_grid: k/v already carry dequantized KV-cache values — skip the
+    per-row fake-quant (re-quantizing grid values would double-round).
     """
     B, Sq, H, hd = q.shape
     Skv, KV = k.shape[1], k.shape[2]
     g = H // KV
-    if use_flash and Sq > 1 and valid is None:
+    dpa = policy is not None and policy.attn_enabled
+    kvf = policy.fmt_kv if (dpa and policy.kv_quantized) else None
+    if use_flash and Sq > 1 and valid is None and not (dpa and kv_on_grid):
         from repro.kernels import ops as kops
-        out = kops.flash_attention(
-            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-            v.transpose(0, 2, 1, 3), causal=causal, window=window)
+        if dpa:
+            out = kops.dpa_flash_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), fmt=policy.fmt_attn, fmt_kv=kvf,
+                causal=causal, window=window)
+        else:
+            out = kops.flash_attention(
+                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                v.transpose(0, 2, 1, 3), causal=causal, window=window)
         return out.transpose(0, 2, 1, 3)
     if q_chunk and Sq > q_chunk and Sq % q_chunk == 0 and valid is None:
         @jax.checkpoint
@@ -104,14 +116,10 @@ def _sdpa(q, k, v, *, causal, window, offset, valid=None, use_flash=False,
             # re-materializes the full S^2 matrix the chunking avoids)
             qs = jax.lax.dynamic_slice_in_dim(q, i * q_chunk, q_chunk, 1)
             return _sdpa(qs, k, v, causal=causal, window=window,
-                         offset=offset + i * q_chunk)
+                         offset=offset + i * q_chunk, policy=policy,
+                         kv_on_grid=kv_on_grid)
         out = jax.lax.map(chunk, jnp.arange(Sq // q_chunk))
         return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
-    kh = jnp.repeat(k, g, axis=2)     # (B, Skv, H, hd) — GQA expansion
-    vh = jnp.repeat(v, g, axis=2)
-    logits = jnp.einsum("bshd,bthd->bhst", q, kh,
-                        preferred_element_type=jnp.float32)
-    logits = logits * (hd ** -0.5)
     qpos = offset + jnp.arange(Sq)[:, None]
     kpos = jnp.arange(Skv)[None, :]
     mask = jnp.ones((Sq, Skv), bool)
@@ -121,6 +129,16 @@ def _sdpa(q, k, v, *, causal, window, offset, valid=None, use_flash=False,
         mask = mask & (kpos > qpos - window)
     if valid is not None:
         mask = mask & valid[None, :]
+    if dpa:
+        from repro.models.decode_attn import dpa_attention
+        return dpa_attention(q, k, v, mask[None, None],
+                             fmt=policy.fmt_attn, fmt_kv=kvf,
+                             scale=hd ** -0.5, kv_on_grid=kv_on_grid)
+    kh = jnp.repeat(k, g, axis=2)     # (B, Skv, H, hd) — GQA expansion
+    vh = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q, kh,
+                        preferred_element_type=jnp.float32)
+    logits = logits * (hd ** -0.5)
     logits = jnp.where(mask[None, None], logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
     return jnp.einsum("bhst,bthd->bshd", probs, vh)
@@ -163,11 +181,17 @@ def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
 
     new_cache = cache
     valid = None
+    kv_on_grid = False
     sdpa_offset = offset
     sdpa_causal = causal and cross_kv is None
     sdpa_window = window
+    # flash_decode serves raw caches only: a kv-quantized policy takes
+    # the DPA quantized-cache decode path below instead (the shard-local
+    # partial-softmax combine does not speak codes+scales yet — see
+    # ModelConfig.flash_decode)
     if (cache is not None and cross_kv is None and Sq == 1
-            and cache_mode == "full" and cfg.flash_decode):
+            and cache_mode == "full" and cfg.flash_decode
+            and "k" in cache):
         from repro.distributed.sharding import _ambient_mesh
         mesh = _ambient_mesh()
         S_ctx = cache["k"].shape[1]
@@ -180,7 +204,29 @@ def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
                             "data", None, "model")
             y = apply_linear(params["wo"], y, policy)
             return maybe_shard(y, "data", "model", None), {"k": kc, "v": vc}
-    if cache is not None and cross_kv is None:
+    if cache is not None and cross_kv is None and "k_codes" in cache:
+        # quantized KV cache (full mode): new rows quantize into the
+        # format-width cache; attention consumes dequantized-in-prologue
+        # values, so prefill and decode see identical numerics
+        from repro.core import kvcache as KV
+        new_cache = KV.update_kv_cache(cache, k, v, offset,
+                                       fmt=policy.fmt_kv,
+                                       packed=policy.kv_packed)
+        if Sq == 1:
+            # decode: DPA QK^T / PV straight off the quantized cache
+            from repro.models.decode_attn import dpa_decode_attn
+            y = dpa_decode_attn(q, new_cache, offset, fmt=policy.fmt_attn,
+                                fmt_kv=policy.fmt_kv,
+                                kv_packed=policy.kv_packed,
+                                scale=hd ** -0.5)
+            y = maybe_shard(y.reshape(B, Sq, cfg.n_heads * hd),
+                            "data", None, "model")
+            y = apply_linear(params["wo"], y, policy)
+            return maybe_shard(y, "data", "model", None), new_cache
+        k, v = KV.dequantize_cache(new_cache, fmt=policy.fmt_kv,
+                                   packed=policy.kv_packed)
+        kv_on_grid = True
+    elif cache is not None and cross_kv is None:
         W = cache["k"].shape[1]
         cdt = cache["k"].dtype
         if cache_mode == "window":
@@ -216,7 +262,8 @@ def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
     y = _sdpa(q, k, v, causal=sdpa_causal, window=sdpa_window,
               offset=sdpa_offset if (cache is not None or Sq > 1) else 0,
               valid=valid, use_flash=cfg.use_flash,
-              q_chunk=cfg.attn_chunk)
+              q_chunk=cfg.attn_chunk, policy=policy,
+              kv_on_grid=kv_on_grid)
     y = maybe_shard(y.reshape(B, Sq, cfg.n_heads * hd),
                     "data", None, "model")
     y = apply_linear(params["wo"], y, policy)

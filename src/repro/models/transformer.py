@@ -8,7 +8,6 @@ unscanned tail.  Caches/states thread through the scan for prefill/decode.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
@@ -51,9 +50,23 @@ def init_block(key, cfg: ModelConfig, kind: str):
 
 def init_block_cache(cfg: ModelConfig, kind: str, batch: int, s_ctx: int,
                      dtype):
-    """Structural cache for one block (decode mode)."""
+    """Structural cache for one block (decode mode).
+
+    Full-context attention caches honor the policy's KV bits: with
+    fmt_kv set they are `repro.core.kvcache` pytrees (codes + per-row
+    scales at format width) instead of raw compute-dtype tensors.
+    Sliding-window caches stay raw — the shift-left update would have to
+    roll codes and scales in lockstep for no bandwidth story (the window
+    bounds the cache at W tokens already).
+    """
     hd = cfg.hd
     if kind in ("attn", "dec"):
+        from repro.core.policy import get_policy
+        pol = get_policy(cfg.policy)
+        if pol.kv_quantized:
+            from repro.core.kvcache import init_kv_cache
+            return init_kv_cache(batch, s_ctx, cfg.n_kv_heads, hd,
+                                 fmt=pol.fmt_kv, packed=pol.kv_packed)
         shp = (batch, s_ctx, cfg.n_kv_heads, hd)
         return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
     if kind == "attn_local":

@@ -1,0 +1,40 @@
+"""Golden-vector reproducibility check.
+
+Regenerates the DPA golden vectors with the current JAX/ml_dtypes stack
+and asserts bit-identity against the checked-in
+`tests/golden/dpa_vectors.npz`.  A drift here means the golden *model*
+(or a dependency's numerics) changed — exactly what the replay suite is
+designed to catch before it silently re-baselines.
+
+Called from two places (the single source of truth for the check):
+  - CI's `golden` job:  PYTHONPATH=src python tests/golden/check_reproducible.py
+  - the tier-1 suite:   tests/test_dpa_golden.py::test_golden_vectors_reproduce
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+
+def check() -> int:
+    """Regenerate into a temp file, compare, return the array count."""
+    sys.path.insert(0, HERE)
+    import generate_dpa_vectors as g
+    tmp = os.path.join(tempfile.mkdtemp(), "fresh.npz")
+    g.main(tmp)
+    a = np.load(os.path.join(HERE, "dpa_vectors.npz"))
+    b = np.load(tmp)
+    assert set(a.files) == set(b.files), "golden array set drifted"
+    for name in a.files:
+        assert np.array_equal(a[name], b[name]), f"{name} drifted"
+    return len(a.files)
+
+
+if __name__ == "__main__":
+    n = check()
+    print(f"{n} golden arrays reproduce bit-for-bit")

@@ -1,0 +1,305 @@
+"""DPA-quantized attention conformance: kernel / jnp fallback / decode
+path vs the `kernels.ref` oracles, across head dims x seq lens x Table-I
+modes, plus NaN/Inf propagation through the f32 softmax and packed-fp4
+KV-cache bit-identity.
+
+Tolerance structure mirrors the matmul conformance suite:
+
+  vs `dpa_flash_attention_ref` (the semantic spec): near bit-tight.  The
+  only legitimate slack is absmax-tie rounding — XLA fuses the in-kernel
+  quantize into the dot, so logits can differ from the spec by an ulp and
+  flip a probability across a grid-rounding boundary (one grid step at
+  most, hence the per-format atol).
+  vs `flash_attention_ref` (f32 accuracy): the matmul suite's policy
+  tolerances — fp16 0.002(x), fp8 0.1, fp4-operand modes 0.35.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvcache as KV
+from repro.core import get_policy
+from repro.kernels import flash_attention as fa
+from repro.kernels import ops as O
+from repro.kernels import ref
+
+MODES = ["fp16", "bf16", "fp8_e4m3", "fp4_e2m1"]   # Table-I: 2/2/4/8-term
+# one-grid-step headroom for quantization tie flips (see module docstring)
+SPEC_ATOL = {"fp16": 1e-3, "bf16": 1e-3, "fp8_e4m3": 0.05,
+             "fp4_e2m1": 0.05}
+# f32-accuracy budget == matmul conformance suite tolerances
+F32_TOL = {"fp16": 0.002, "bf16": 0.02, "fp8_e4m3": 0.1, "fp4_e2m1": 0.35}
+
+
+def _qkv(seed, B=2, H=4, Hkv=2, S=128, hd=64, dtype=jnp.float32):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, hd), dtype)
+    return q, k, v
+
+
+def _rel(got, want):
+    got, want = np.asarray(got), np.asarray(want)
+    return float(np.abs(got - want).max() / np.abs(want).max())
+
+
+# -----------------------------------------------------------------------------
+# kernel vs the semantic spec and vs f32 accuracy
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", MODES)
+@pytest.mark.parametrize("hd,seq", [(16, 128), (64, 128), (64, 256)])
+def test_dpa_flash_attention_vs_spec(fmt, hd, seq):
+    q, k, v = _qkv(hd + seq, S=seq, hd=hd)
+    got = O.dpa_flash_attention(q, k, v, fmt=fmt)
+    want = ref.dpa_flash_attention_ref(q, k, v, fmt=fmt, bk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=SPEC_ATOL[fmt])
+
+
+@pytest.mark.parametrize("fmt", MODES)
+@pytest.mark.parametrize("hd,seq", [(16, 128), (64, 128), (64, 256)])
+def test_dpa_flash_attention_accuracy_vs_f32(fmt, hd, seq):
+    """The acceptance contract: DPA attention stays inside the matmul
+    conformance suite's per-format budget vs the f32 reference."""
+    q, k, v = _qkv(hd + seq, S=seq, hd=hd)
+    got = O.dpa_flash_attention(q, k, v, fmt=fmt)
+    want = ref.flash_attention_ref(q, k, v)
+    assert _rel(got, want) < F32_TOL[fmt], (fmt, hd, seq)
+
+
+def test_kv4_attn8_trans_precision_accuracy():
+    """The serving sweet spot: fp8 attention arithmetic over a (packed)
+    fp4 KV cache holds the matmul suite's fp4 budget vs f32."""
+    for hd, seq in [(16, 128), (64, 256)]:
+        q, k, v = _qkv(7 * hd + seq, S=seq, hd=hd)
+        got = O.dpa_flash_attention(q, k, v, fmt="fp8_e4m3",
+                                    fmt_kv="fp4_e2m1")
+        want = ref.flash_attention_ref(q, k, v)
+        assert _rel(got, want) < F32_TOL["fp4_e2m1"], (hd, seq)
+
+
+@pytest.mark.parametrize("causal,window", [(False, None), (True, 32)])
+def test_dpa_flash_attention_masks_vs_spec(causal, window):
+    q, k, v = _qkv(3, S=128, hd=32)
+    got = O.dpa_flash_attention(q, k, v, fmt="fp8_e4m3", causal=causal,
+                                window=window)
+    want = ref.dpa_flash_attention_ref(q, k, v, fmt="fp8_e4m3",
+                                       causal=causal, window=window, bk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=SPEC_ATOL["fp8_e4m3"])
+
+
+def test_dpa_flash_attention_kv_longer_than_q():
+    """Sq < Sk (chunked-prefill cache-suffix attention)."""
+    ks = jax.random.split(jax.random.PRNGKey(9), 3)
+    q = jax.random.normal(ks[0], (1, 4, 128, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, 256, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, 256, 64), jnp.float32)
+    got = O.dpa_flash_attention(q, k, v, fmt="fp8_e4m3")
+    want = ref.dpa_flash_attention_ref(q, k, v, fmt="fp8_e4m3", bk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=SPEC_ATOL["fp8_e4m3"])
+
+
+# -----------------------------------------------------------------------------
+# quantized KV cache: kernel prologue-dequant path + packed bit-identity
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt_kv", ["fp16", "fp8_e4m3", "fp4_e2m1"])
+def test_kernel_cache_path_matches_raw(fmt_kv):
+    """Pre-quantized cache rows through the kernel == raw K/V quantized
+    in the prologue (same recipe, so only fused-dot ulp noise remains)."""
+    q, k, v = _qkv(11, S=256, hd=64)
+    kc, ks = KV.quantize_kv(k, fmt=fmt_kv)
+    vc, vs = KV.quantize_kv(v, fmt=fmt_kv)
+    raw = fa.dpa_flash_attention(q, k, v, fmt="fp8_e4m3", fmt_kv=fmt_kv,
+                                 interpret=True)
+    cached = fa.dpa_flash_attention(q, kc, vc, ks, vs, fmt="fp8_e4m3",
+                                    fmt_kv=fmt_kv, kv_quant=True,
+                                    interpret=True)
+    np.testing.assert_allclose(np.asarray(raw), np.asarray(cached),
+                               rtol=1e-4, atol=SPEC_ATOL["fp8_e4m3"])
+
+
+def test_packed_fp4_kv_bit_identity():
+    """The packed layout contract, attention edition: nibble-packing the
+    fp4 KV cache is pure I/O layout — codes round-trip exactly and the
+    kernel output is BIT-identical to the unpacked cache."""
+    from repro.core.packing import pack_fp4, unpack_fp4
+    q, k, v = _qkv(13, S=256, hd=64)
+    kc, ks = KV.quantize_kv(k, fmt="fp4_e2m1", packed=False)
+    vc, vs = KV.quantize_kv(v, fmt="fp4_e2m1", packed=False)
+    kp, ksp = KV.quantize_kv(k, fmt="fp4_e2m1", packed=True)
+    vp, vsp = KV.quantize_kv(v, fmt="fp4_e2m1", packed=True)
+    assert kp.shape[-1] == kc.shape[-1] // 2 and kp.dtype == jnp.uint8
+    assert np.array_equal(np.asarray(unpack_fp4(kp)), np.asarray(kc))
+    assert np.array_equal(np.asarray(pack_fp4(vc)), np.asarray(vp))
+    np.testing.assert_array_equal(np.asarray(ks), np.asarray(ksp))
+    unpacked = fa.dpa_flash_attention(q, kc, vc, ks, vs, fmt="fp8_e4m3",
+                                      fmt_kv="fp4_e2m1", kv_quant=True,
+                                      interpret=True)
+    packed = fa.dpa_flash_attention(q, kp, vp, ksp, vsp, fmt="fp8_e4m3",
+                                    fmt_kv="fp4_e2m1", kv_quant=True,
+                                    kv_packed=True, interpret=True)
+    assert np.array_equal(np.asarray(unpacked), np.asarray(packed))
+
+
+def test_kvcache_roundtrip_matches_fake_quant():
+    """Cache round-trip == quant_rows_grid fake-quant, bit for bit (the
+    prefill-vs-decode consistency contract)."""
+    from repro.core.quantize import quant_rows_grid
+    x = jax.random.normal(jax.random.PRNGKey(17), (2, 64, 2, 32),
+                          jnp.float32) * 4
+    for fmt, packed in [("fp16", False), ("fp8_e4m3", False),
+                        ("fp4_e2m1", False), ("fp4_e2m1", True)]:
+        c, s = KV.quantize_kv(x, fmt=fmt, packed=packed)
+        grid, scale = quant_rows_grid(x, fmt)
+        assert np.array_equal(np.asarray(KV.dequantize_kv(
+            c, s, fmt=fmt, packed=packed)), np.asarray(grid * scale)), fmt
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(scale))
+
+
+def test_kv_cache_bytes_reduction():
+    """The bandwidth acceptance bar: packed-fp4 KV moves >=4x (here ~7x)
+    fewer bytes than the f32 cache; fp8 ~3.9x; fp16 ~2x."""
+    nb4 = KV.kv_cache_nbytes(8, 1024, 8, 128, fmt="fp4_e2m1", packed=True)
+    nb8 = KV.kv_cache_nbytes(8, 1024, 8, 128, fmt="fp8_e4m3")
+    nb16 = KV.kv_cache_nbytes(8, 1024, 8, 128, fmt="fp16")
+    assert nb4["reduction_vs_f32"] >= 4.0
+    assert 3.5 < nb8["reduction_vs_f32"] < 4.0
+    assert 1.9 < nb16["reduction_vs_f32"] <= 2.0
+
+
+# -----------------------------------------------------------------------------
+# jnp fallback + decode path
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["fp16", "fp8_e4m3", "fp4_e2m1"])
+def test_jnp_fallback_matches_single_block_spec(fmt):
+    """`decode_attn.dpa_attention` (the XLA path serving non-aligned
+    shapes) == the spec with one key block (global max)."""
+    from repro.models.decode_attn import dpa_attention
+    B, H, Hkv, S, hd = 2, 4, 2, 96, 32          # non-128-multiple seq
+    q, k, v = _qkv(19, B=B, H=H, Hkv=Hkv, S=S, hd=hd)
+    # layers layout (B,S,{H|KV},hd), grouped K/V, causal mask
+    qpos = jnp.arange(S)[:, None]
+    mask = (jnp.arange(S)[None, :] <= qpos)[None, None]
+    got = dpa_attention(q.transpose(0, 2, 1, 3),
+                        k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3),
+                        mask, fmt=fmt, scale=hd ** -0.5)
+    want = ref.dpa_flash_attention_ref(q, k, v, fmt=fmt, bk=S)
+    np.testing.assert_allclose(
+        np.asarray(got.transpose(0, 2, 1, 3)), np.asarray(want),
+        rtol=1e-4, atol=SPEC_ATOL[fmt])
+
+
+@pytest.mark.parametrize("pol", ["attn_fp8_dpa", "kv4_attn8_packed"])
+def test_dpa_decode_attn_matches_spec(pol):
+    """Single-token decode off the quantized cache == the spec evaluated
+    at the last position (Sq=1, one key block)."""
+    from repro.models.decode_attn import dpa_decode_attn
+    p = get_policy(pol)
+    B, H, Hkv, S, hd = 2, 4, 2, 64, 32
+    q, k, v = _qkv(23, B=B, H=H, Hkv=Hkv, S=S, hd=hd)
+    cache = KV.init_kv_cache(B, S, Hkv, hd, fmt=p.fmt_kv,
+                             packed=p.kv_packed)
+    cache = KV.update_kv_cache(cache, k.transpose(0, 2, 1, 3),
+                               v.transpose(0, 2, 1, 3), 0,
+                               fmt=p.fmt_kv, packed=p.kv_packed)
+    q_last = q[:, :, -1:, :]                       # (B,H,1,hd)
+    got = dpa_decode_attn(q_last.transpose(0, 2, 1, 3), cache, S - 1,
+                          fmt=p.fmt_attn, fmt_kv=p.fmt_kv,
+                          kv_packed=p.kv_packed, scale=hd ** -0.5)
+    want = ref.dpa_flash_attention_ref(q_last, k, v, fmt=p.fmt_attn,
+                                       fmt_kv=p.fmt_kv, bk=S)
+    np.testing.assert_allclose(
+        np.asarray(got.transpose(0, 2, 1, 3)), np.asarray(want),
+        rtol=1e-4, atol=SPEC_ATOL[p.fmt_attn])
+
+
+def test_cache_spec_sequence_shards_quantized_leaves():
+    """`distributed.sharding.cache_spec` must put the sequence axis of a
+    quantized cache on the "model" axis for codes AND scales — a shard
+    holding codes without their scales cannot dequantize anything."""
+    from jax.sharding import Mesh
+    from repro.distributed import sharding as shd
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1, 1),
+                ("data", "model", "pod"))
+    cache = KV.init_kv_cache(2, 64, 2, 32, fmt="fp4_e2m1", packed=True)
+    specs = shd.cache_spec({"groups": {"p0": jax.tree.map(
+        lambda x: x[None], cache)}}, mesh)
+    for name in ("k_codes", "k_scale", "v_codes", "v_scale"):
+        spec = specs["groups"]["p0"][name].spec
+        assert spec[2] == "model", (name, spec)   # lead + (B, S, KV, .)
+
+
+def test_model_prefill_matches_stepped_decode():
+    """End-to-end policy wiring: prefill writing the quantized cache and
+    token-by-token DPA decode off it produce the same logits."""
+    from repro.configs import get_config, reduce_config
+    from repro.models import build_model
+    cfg = reduce_config(get_config("qwen3-4b")).replace(
+        policy="kv4_attn8_packed")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S0 = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, S0), 0,
+                              cfg.vocab_size)
+    logits, _ = model.prefill(params, {"tokens": toks})
+    caches = model.init_caches(B, S0 + 4)
+    assert KV.is_quantized(
+        jax.tree.leaves(caches, is_leaf=KV.is_quantized)[0])
+    lg = None
+    for t in range(S0):
+        lg, caches = model.decode_step(
+            params, {"tokens": toks[:, t:t + 1], "index": jnp.int32(t)},
+            caches)
+    np.testing.assert_allclose(np.asarray(lg[:, -1]),
+                               np.asarray(logits[:, -1]),
+                               rtol=1e-4, atol=1e-4)
+
+
+# -----------------------------------------------------------------------------
+# NaN / Inf propagation through the f32 softmax core
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["fp16", "fp8_e4m3", "fp4_e2m1"])
+def test_nan_in_q_poisons_only_its_row(fmt):
+    """A NaN query row must yield an all-NaN output row and leave every
+    other row finite — even for fp4, whose grid has no NaN encoding (the
+    per-row absmax scale carries the NaN through the software exponent
+    path)."""
+    q, k, v = _qkv(29, B=1, H=2, Hkv=2, S=128, hd=16)
+    qn = q.at[0, 0, 5, 3].set(jnp.nan)
+    out = np.asarray(O.dpa_flash_attention(qn, k, v, fmt=fmt))
+    assert np.isnan(out[0, 0, 5]).all()
+    assert np.isfinite(np.delete(out[0, 0], 5, axis=0)).all()
+    assert np.isfinite(out[0, 1]).all()
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "fp4_e2m1"])
+def test_nan_in_k_poisons_attending_rows(fmt):
+    q, k, v = _qkv(31, B=1, H=2, Hkv=2, S=128, hd=16)
+    kn = k.at[0, 0, 3, 2].set(jnp.nan)
+    out = np.asarray(O.dpa_flash_attention(q, kn, v, fmt=fmt))
+    assert np.isnan(out[0, 0, 3:]).all()       # causal: rows >= 3 see it
+    assert np.isfinite(out[0, 0, :3]).all()
+
+
+@pytest.mark.parametrize("fmt", ["fp8_e4m3", "fp4_e2m1"])
+def test_inf_in_v_breaks_finiteness_downstream(fmt):
+    """An Inf value row must surface as non-finite output for every query
+    that attends it.  (Like the f32 reference, masked-out queries may
+    also see NaN through the 0 x inf PV product — IEEE, not a bug — so
+    only the attending-rows claim is pinned; the untouched head proves
+    containment.)"""
+    q, k, v = _qkv(37, B=1, H=2, Hkv=2, S=128, hd=16)
+    vi = v.at[0, 0, 3, 2].set(jnp.inf)
+    out = np.asarray(O.dpa_flash_attention(q, k, vi, fmt=fmt))
+    assert not np.isfinite(out[0, 0, 3:]).all()
+    assert np.isfinite(out[0, 1]).all()        # other kv-head unaffected

@@ -9,8 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.runtime import checkpoint as ck
-from repro.runtime.fault import (StragglerTimeout, Supervisor,
-                                 SupervisorConfig)
+from repro.runtime.fault import Supervisor, SupervisorConfig
 
 
 def _state(seed=0):

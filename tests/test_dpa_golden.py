@@ -70,3 +70,13 @@ def test_golden_file_covers_all_modes(vectors):
     names = set(vectors.files)
     for fmt_ab, fmt_acc, n in MODES:
         assert f"{fmt_ab}_x{n}_{fmt_acc}_finite__out" in names, (fmt_ab, n)
+
+
+def test_golden_vectors_reproduce():
+    """Regenerating the vectors with the current stack is bit-identical
+    to the checked-in npz (shared with CI's golden job —
+    `tests/golden/check_reproducible.py` is the single implementation)."""
+    import sys
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "golden"))
+    import check_reproducible
+    assert check_reproducible.check() > 0

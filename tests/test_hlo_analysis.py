@@ -1,8 +1,6 @@
 """Unit tests for the HLO collective parser + analytic cost census."""
 import textwrap
 
-import pytest
-
 from repro.configs import SHAPES, get_config
 from repro.launch import analytic as A
 from repro.launch import hlo_analysis as H

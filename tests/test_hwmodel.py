@@ -1,8 +1,4 @@
 """The paper's headline claims must fall out of the hardware model."""
-import math
-
-import pytest
-
 from repro.hwmodel import area as A
 from repro.hwmodel import energy as E
 from repro.hwmodel import throughput as T

@@ -1,8 +1,5 @@
 """Equivalence tests for the §Perf machinery: every optimization knob
 must be a pure performance transform (same math, different schedule)."""
-import numpy as np
-import pytest
-
 import jax
 import jax.numpy as jnp
 
@@ -29,7 +26,6 @@ def test_remat_block_equivalence():
 
 def test_chunked_loss_checkpoint_equivalence():
     from repro.distributed.step import make_loss_fn
-    from repro.optim import adamw
     cfg = CFG.replace(logits_chunk=8, n_layers=2)
     m = build_model(cfg)
     m0 = build_model(cfg.replace(logits_chunk=0))
@@ -70,7 +66,6 @@ def test_serve_quant_spec_dtype():
 
 def test_mesh_plan_fully_dp_specs():
     import os
-    import jax as j
     from repro.distributed import sharding as shd
     shd.set_mesh_plan("fully_dp")
     try:
