@@ -13,6 +13,10 @@ derived string carries:
                f32 kernel) — deliberately loose; CI machines are noisy,
                but a 20x blowup means someone broke the kernel path.
 
+A row's baseline entry is one spec or a list of specs (a row's derived
+string can carry several ``key=VALx`` metrics — e.g. the engine row pins
+both its static-cache and f32-cache byte ratios).
+
 Usage: python benchmarks/check_regression.py bench.json \
            [--baseline benchmarks/baseline.json]
 """
@@ -31,27 +35,35 @@ def load_rows(path: str) -> dict:
 
 def check(current: dict, baseline: dict) -> list:
     failures = []
-    for name, spec in baseline["metrics"].items():
+    for name, specs in baseline["metrics"].items():
         row = current.get(name)
         if row is None:
             failures.append(f"{name}: missing from benchmark output")
             continue
-        key = spec["key"]
-        got = row.get("metrics", {}).get(key)
-        if got is None:
-            failures.append(f"{name}: derived metric {key!r} not reported "
-                            f"(derived={row.get('derived')!r})")
-            continue
-        if "value" in spec:
-            want, rtol = spec["value"], spec.get("rtol", 0.05)
-            if abs(got - want) > rtol * abs(want):
-                failures.append(f"{name}: {key}={got:.3f} drifted from "
-                                f"baseline {want:.3f} (rtol {rtol})")
-        if "min" in spec and got < spec["min"]:
-            failures.append(f"{name}: {key}={got:.3f} < floor {spec['min']}")
-        if "max" in spec and got > spec["max"]:
-            failures.append(f"{name}: {key}={got:.3f} > ceiling "
-                            f"{spec['max']}")
+        # a row may pin several derived metrics (a list of specs)
+        for spec in specs if isinstance(specs, list) else [specs]:
+            failures.extend(_check_spec(name, spec, row))
+    return failures
+
+
+def _check_spec(name: str, spec: dict, row: dict) -> list:
+    failures = []
+    key = spec["key"]
+    got = row.get("metrics", {}).get(key)
+    if got is None:
+        failures.append(f"{name}: derived metric {key!r} not reported "
+                        f"(derived={row.get('derived')!r})")
+        return failures
+    if "value" in spec:
+        want, rtol = spec["value"], spec.get("rtol", 0.05)
+        if abs(got - want) > rtol * abs(want):
+            failures.append(f"{name}: {key}={got:.3f} drifted from "
+                            f"baseline {want:.3f} (rtol {rtol})")
+    if "min" in spec and got < spec["min"]:
+        failures.append(f"{name}: {key}={got:.3f} < floor {spec['min']}")
+    if "max" in spec and got > spec["max"]:
+        failures.append(f"{name}: {key}={got:.3f} > ceiling "
+                        f"{spec['max']}")
     return failures
 
 

@@ -1,0 +1,79 @@
+"""Serving-engine benchmarks: paged-cache memory + engine decode rate.
+
+The continuous-batching face of the bandwidth story.  A static (B,
+S_max) cache prices every request at the longest sequence; the paged
+cache prices them at live tokens (page-granular).  Rows report
+
+  sw/paged_kv_live_bytes     : deterministic — bytes a mixed-length
+                               workload's pages hold vs the static
+                               (B, S_max) cache at the same format
+                               (live_vs_static) and vs the f32 seed
+                               cache (vs_f32_static).  The regression
+                               gate pins both (modeled bytes, any drift
+                               is a contract change).
+  sw/engine_decode_tokens    : wall-clock of the engine serving a small
+                               mixed workload end to end (reduced
+                               qwen3-4b, kv4_attn8_packed) + derived
+                               decode tokens/s — a loose CPU tripwire,
+                               not a TPU number.
+"""
+from __future__ import annotations
+
+from repro.core import get_policy
+from repro.core.kvcache import kv_cache_nbytes, paged_kv_cache_nbytes
+
+# a serving-ish mixed-length snapshot: 8 slots, S_max = 1024, live
+# lengths in whole pages so live == paged (the honest comparison)
+PAGE, N_SLOTS, MAX_PAGES = 64, 8, 16
+LIVE_LENS = (1024, 512, 256, 128, 896, 384, 640, 64)
+
+
+def paged_cache_bytes():
+    """Deterministic: paged live bytes vs the static layouts."""
+    pol = get_policy("kv4_attn8_packed")
+    n_kv, hd = 8, 128
+    live = sum(LIVE_LENS)
+    pages = sum(-(-n // PAGE) for n in LIVE_LENS)
+    nb = paged_kv_cache_nbytes(live, pages, PAGE, n_kv, hd,
+                               fmt=pol.fmt_kv, packed=pol.kv_packed)
+    static = kv_cache_nbytes(N_SLOTS, MAX_PAGES * PAGE, n_kv, hd,
+                             fmt=pol.fmt_kv, packed=pol.kv_packed)
+    return [("sw/paged_kv_live_bytes", float(nb["paged"]),
+             f"live_vs_static={static['total'] / nb['paged']:.2f}x "
+             f"vs_f32_static={static['f32_total'] / nb['paged']:.2f}x")]
+
+
+def engine_decode_rate():
+    """End-to-end engine wall clock on a small mixed workload."""
+    import time
+
+    import jax
+
+    from repro.configs import get_config, reduce_config
+    from repro.launch.engine import Engine, EngineConfig, synthetic_workload
+    from repro.models import build_model
+
+    cfg = reduce_config(get_config("qwen3-4b")).replace(
+        policy="kv4_attn8_packed")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(page_size=8, n_pages=48, max_batch=4,
+                        max_pages_per_req=6, token_budget=16,
+                        prefill_chunk=8)
+    reqs = synthetic_workload(6, vocab=cfg.vocab_size, seed=0,
+                              prompt_range=(8, 24), gen_range=(4, 10))
+    # warm-up run compiles prefill + decode; the timed run reuses them
+    engine = Engine(model, params, ecfg)
+    engine.run(synthetic_workload(2, vocab=cfg.vocab_size, seed=1,
+                                  prompt_range=(8, 24), gen_range=(4, 10)))
+    engine.reset_stats()
+    t0 = time.perf_counter()
+    rep = engine.run(reqs)
+    us = (time.perf_counter() - t0) * 1e6
+    return [("sw/engine_decode_tokens", us,
+             f"tokens_per_s={rep['tokens_per_s']:.1f} "
+             f"page_util={rep['page_util']:.2f}x")]
+
+
+ALL = [paged_cache_bytes, engine_decode_rate]
+SMOKE = [paged_cache_bytes, engine_decode_rate]

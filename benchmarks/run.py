@@ -4,8 +4,9 @@ benches.  Prints ``name,us_per_call,derived`` CSV.
 Flags:
   --paper-only : skip software benches.
   --smoke      : CI gate subset — policy dots, the packed/fused
-                 operand-bandwidth pipeline, and the DPA-attention /
-                 KV-cache suite; no paper figures, no e2e train steps.
+                 operand-bandwidth pipeline, the DPA-attention /
+                 KV-cache suite, and the paged-cache serving engine;
+                 no paper figures, no e2e train steps.
   --json PATH  : also dump rows as JSON (name/us_per_call/derived plus
                  any parsed ``key=<float>x`` derived metrics) — the
                  artifact `benchmarks/check_regression.py` gates on.
@@ -32,7 +33,8 @@ def parse_derived(derived: str) -> dict:
 
 
 def main() -> None:
-    from benchmarks import attention_bench, paper_tables, software_bench
+    from benchmarks import (attention_bench, engine_bench, paper_tables,
+                            software_bench)
     json_path = None
     if "--json" in sys.argv:
         i = sys.argv.index("--json") + 1
@@ -41,11 +43,13 @@ def main() -> None:
                              "--json bench.json")
         json_path = sys.argv[i]
     if "--smoke" in sys.argv:
-        suites = list(software_bench.SMOKE) + list(attention_bench.SMOKE)
+        suites = (list(software_bench.SMOKE) + list(attention_bench.SMOKE)
+                  + list(engine_bench.SMOKE))
     else:
         suites = list(paper_tables.ALL)
         if "--paper-only" not in sys.argv:
-            suites += list(software_bench.ALL) + list(attention_bench.ALL)
+            suites += (list(software_bench.ALL) + list(attention_bench.ALL)
+                       + list(engine_bench.ALL))
     print("name,us_per_call,derived")
     rows = []
     failures = []

@@ -1,0 +1,82 @@
+"""Continuous-batching walkthrough: the paged quantized KV cache serving
+mixed-length traffic.
+
+The static serving path (`examples/quantized_kv_serving.py`) holds a
+(B, S_max) cache — every request pays for the longest one.  This demo
+serves an open-loop Poisson workload of mixed prompt/output lengths
+through `repro.launch.engine` instead, and shows the three claims that
+make it a serving system rather than a demo loop:
+
+  1. cache memory scales with *live tokens*, not B x S_max — the report
+     prices the cache from actual per-request lengths, with the page
+     allocator's utilization alongside;
+  2. requests of different lengths share one batched decode step
+     (per-request positions, block-table reads), admitted and evicted
+     continuously as pages free up;
+  3. numerics are unchanged: the engine's greedy outputs are
+     bit-identical, per request, to the static path serving the same
+     prompt alone (paging is pure relayout + the same DPA contract).
+
+Run: PYTHONPATH=src python examples/continuous_batching.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.launch.engine import (Engine, EngineConfig, format_report,
+                                 synthetic_workload)
+from repro.launch.serve import generate
+from repro.models import build_model
+
+
+def main():
+    cfg = reduce_config(get_config("qwen3-4b")).replace(
+        policy="kv4_attn8_packed")    # fp8 attention over a packed-fp4 cache
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    ecfg = EngineConfig(page_size=8, n_pages=48, max_batch=4,
+                        max_pages_per_req=6, token_budget=16,
+                        prefill_chunk=8)
+    print(f"engine: {ecfg.max_batch} decode slots, "
+          f"{ecfg.n_pages - 1} pages x {ecfg.page_size} tokens "
+          f"(S_max {ecfg.s_max}/request), policy {cfg.policy}")
+
+    # open-loop Poisson traffic: mixed lengths, arrivals spread in time
+    reqs = synthetic_workload(10, vocab=cfg.vocab_size, seed=0, rate=100.0,
+                              prompt_range=(6, 30), gen_range=(3, 10))
+    print("workload:", ", ".join(f"#{r.rid} {r.n_prompt}+{r.max_new}"
+                                 for r in reqs))
+    engine = Engine(model, params, ecfg)
+    rep = engine.run(reqs)
+    print()
+    print(format_report(rep, cfg.policy))
+
+    # the numerics claim: engine output == static path, per request
+    print("\nper-request greedy outputs vs the static-batch path:")
+    for req in sorted(engine.finished, key=lambda r: r.rid)[:4]:
+        out = generate(model, params, jnp.asarray(req.prompt[None]),
+                       req.max_new, ecfg.s_max)
+        want = np.asarray(out)[0, req.n_prompt:]
+        same = np.array_equal(np.asarray(req.out_tokens), want)
+        print(f"  req {req.rid} ({req.n_prompt}+{req.max_new} tokens): "
+              f"{'bit-identical' if same else 'MISMATCH'} "
+              f"{req.out_tokens[:6]}")
+        assert same, (req.rid, req.out_tokens, want.tolist())
+
+    # the memory claim, restated as a single number
+    saved = rep["static_f32_bytes"] / rep["paged_bytes"]
+    print(f"\npeak cache memory: {rep['paged_bytes'] / 1e6:.3f} MB of pages"
+          f" vs {rep['static_f32_bytes'] / 1e6:.3f} MB static f32 "
+          f"(B x S_max) — {saved:.1f}x smaller (format width x paging)")
+
+
+if __name__ == "__main__":
+    main()

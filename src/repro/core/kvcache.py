@@ -8,7 +8,8 @@ cache.  This module owns the storage layout; the *compute* contract (DPA
 f32 accumulation for QK^T/PV over the dequantized-in-prologue operands)
 lives in `kernels.flash_attention` / `models.decode_attn`.
 
-Layout — one entry per (batch, position, kv-head) row of head_dim values:
+Contiguous layout — one entry per (batch, position, kv-head) row of
+head_dim values:
 
   k_codes / v_codes : (B, S, KV, hd)  native narrow dtype (fp16/bf16/fp8),
                       or uint8 E2M1 codes for fp4 — (B, S, KV, hd // 2)
@@ -16,10 +17,30 @@ Layout — one entry per (batch, position, kv-head) row of head_dim values:
   k_scale / v_scale : (B, S, KV, 1) f32 per-row absmax scales — the
                       software exponent path; dequant = widen(codes) * scale.
 
-The quantization recipe is exactly `core.quantize.quant_rows_grid` over the
-head_dim axis, so a cache round-trip is bit-identical to the fake-quant the
-attention reference applies to raw K/V — prefill (raw operands) and decode
-(cached operands) see the same numbers.
+Paged layout — the serving-engine variant.  A static (B, S_max) cache is
+the software analogue of FPnew-style lane replication: memory sized for
+the longest request, replicated per batch slot.  The paged cache removes
+it the same way TransDot removes idle mantissa lanes — storage is a pool
+of fixed-size pages shared by every live request, and a per-request block
+table maps its token timeline onto pages, so cache memory scales with
+*live tokens*, not B x S_max:
+
+  k_codes / v_codes : (P, page, KV, wc) page pool (same code dtype/width
+                      rules as the contiguous layout)
+  k_scale / v_scale : (P, page, KV, 1) f32 per-row scales
+  block table       : (B, max_pages) i32, row b listing the pages that
+                      hold request b's tokens in timeline order; token t
+                      lives at (table[b, t // page], t % page).
+
+Page 0 is a scratch page (see `PageAllocator`): idle batch slots point
+their whole table row at it so a fixed-shape decode step can harmlessly
+write there, and no live request ever references it.
+
+Both layouts share one quantization recipe — exactly
+`core.quantize.quant_rows_grid` over the head_dim axis — so a cache
+round-trip is bit-identical to the fake-quant the attention reference
+applies to raw K/V, and a paged cache holds bit-identical codes/scales to
+the contiguous cache it replaces (paging is pure relayout).
 """
 from __future__ import annotations
 
@@ -136,3 +157,172 @@ def kv_cache_nbytes(batch: int, s_ctx: int, n_kv: int, hd: int, *, fmt,
     f32 = 2 * 4 * n_rows * hd
     return {"total": total, "f32_total": f32,
             "reduction_vs_f32": f32 / total}
+
+
+# -----------------------------------------------------------------------------
+# paged layout: page pool + block table (the continuous-batching cache)
+# -----------------------------------------------------------------------------
+
+SCRATCH_PAGE = 0
+
+
+def is_paged(cache) -> bool:
+    """True for the paged layout (page pool + "block_table" pytree)."""
+    return isinstance(cache, dict) and "block_table" in cache
+
+
+def init_paged_kv_cache(n_pages: int, page_size: int, n_kv: int, hd: int,
+                        *, fmt, packed: bool = False):
+    """Zeroed page pool: {k,v}_codes (P, page, KV, wc) + f32 scales.
+
+    The pool carries no block table — tables are per-request routing state
+    owned by the scheduler (`launch.engine`); `make_block_table` builds the
+    (B, max_pages) leaf the decode step consumes alongside the pool."""
+    wc = _codes_width(hd, fmt, packed)
+    codes = jnp.zeros((n_pages, page_size, n_kv, wc), _codes_dtype(fmt))
+    scale = jnp.zeros((n_pages, page_size, n_kv, 1), jnp.float32)
+    return {"k_codes": codes, "k_scale": scale,
+            "v_codes": codes, "v_scale": scale}
+
+
+def make_block_table(n_slots: int, max_pages: int):
+    """All-scratch (B, max_pages) i32 table — every slot starts idle."""
+    return jnp.full((n_slots, max_pages), SCRATCH_PAGE, jnp.int32)
+
+
+def paged_write_token(cache, k_new, v_new, positions, *, fmt,
+                      packed: bool = False):
+    """Quantize one token per batch slot into its page.
+
+    k_new/v_new: (B, 1, KV, hd); positions: (B,) i32 absolute token index
+    per request.  Row b lands at (table[b, pos_b // page], pos_b % page).
+    Idle slots carry an all-scratch table row, so their writes hit the
+    scratch page and never touch live data.  Returns the cache pytree with
+    updated pools (block_table passes through unchanged)."""
+    ps = cache["k_codes"].shape[1]
+    table = cache["block_table"]
+    pos = jnp.asarray(positions, jnp.int32)
+    page = jnp.take_along_axis(table, (pos // ps)[:, None], axis=1)[:, 0]
+    slot = pos % ps
+    kc, ks = quantize_kv(k_new, fmt=fmt, packed=packed)
+    vc, vs = quantize_kv(v_new, fmt=fmt, packed=packed)
+    out = dict(cache)
+    for key, new in (("k_codes", kc), ("k_scale", ks),
+                     ("v_codes", vc), ("v_scale", vs)):
+        out[key] = cache[key].at[page, slot].set(new[:, 0])
+    return out
+
+
+def gather_paged_kv(cache):
+    """Page pool + block table -> contiguous-layout view.
+
+    Returns a {k,v}_codes/{k,v}_scale pytree shaped (B, max_pages * page,
+    KV, ...) — request b's timeline re-materialized in order, exactly the
+    contiguous layout `dequantize_cache` (and thus the whole DPA decode
+    path) consumes.  This is the jnp gather fallback of the block-table
+    read; rows past a request's live length come from whatever pages its
+    table names (scratch for idle tail entries) and must be masked by
+    position, as `models.decode_attn.dpa_paged_decode_attn` does.  Pure
+    relayout: gathered codes/scales are bit-identical to the pool's."""
+    table = cache["block_table"]
+    B, n_pg = table.shape
+    out = {}
+    for key in QUANT_KEYS:
+        pool = cache[key]                       # (P, page, KV, w)
+        ps = pool.shape[1]
+        g = pool[table]                         # (B, n_pg, page, KV, w)
+        out[key] = g.reshape((B, n_pg * ps) + pool.shape[2:])
+    return out
+
+
+def write_prefill_rows(cache, rows, page_ids, length: int):
+    """Scatter a prefill's first `length` contiguous rows into pages.
+
+    rows: contiguous-layout pytree with leaves (S, KV, ...) (one request,
+    batch dim already stripped); page_ids: host list of allocated pages in
+    timeline order; length: host int, number of live rows.  Copies whole
+    pages plus the partial tail page — pure relayout, so the pages hold
+    codes/scales bit-identical to the staging cache's.  Returns the cache
+    with updated pools."""
+    ps = cache["k_codes"].shape[1]
+    n_need = -(-length // ps) if length else 0
+    if n_need > len(page_ids):
+        raise ValueError(f"{length} rows need {n_need} pages, "
+                         f"got {len(page_ids)}")
+    out = dict(cache)
+    for key in QUANT_KEYS:
+        pool, src = out[key], rows[key]
+        for j in range(n_need):
+            pid = int(page_ids[j])
+            n = min(ps, length - j * ps)
+            pool = pool.at[pid, :n].set(src[j * ps:j * ps + n])
+        out[key] = pool
+    return out
+
+
+def paged_kv_cache_nbytes(live_tokens: int, pages_in_use: int,
+                          page_size: int, n_kv: int, hd: int, *, fmt,
+                          packed: bool = False) -> dict:
+    """Byte accounting for a paged cache vs the static (B, S_max) layouts.
+
+    `live` counts exactly the rows live requests occupy (the engine
+    report's honest number); `paged` counts whole pages in use (live
+    rounded up by page granularity — the allocator's footprint).  Compare
+    against `kv_cache_nbytes(B, S_max, ...)` for the static-batch
+    baselines the engine replaces."""
+    def row_bytes(n_rows):
+        return 2 * (operand_nbytes(n_rows * hd, fmt, packed=packed)
+                    + 4 * n_rows)               # K and V, codes + scales
+    return {"live": row_bytes(live_tokens * n_kv),
+            "paged": row_bytes(pages_in_use * page_size * n_kv)}
+
+
+class PageAllocator:
+    """Free-list page allocator for the paged KV cache.
+
+    Page 0 is reserved as the scratch page idle decode slots write to, so
+    `capacity` pages yield `capacity - 1` allocatable ones.  Freed pages
+    return to the free list and are reused LIFO (hot pages stay cache-
+    warm).  Tracks in-use count and the peak for utilization reporting."""
+
+    def __init__(self, capacity: int):
+        if capacity < 2:
+            raise ValueError("need >= 2 pages (page 0 is scratch)")
+        self.capacity = capacity
+        self._free = list(range(capacity - 1, 0, -1))   # pop() -> page 1 first
+        self._used = set()
+        self.peak_in_use = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return len(self._used)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.n_free
+
+    def alloc(self, n: int) -> list:
+        """Pop `n` pages off the free list (raises if short — callers gate
+        admission on `can_alloc`, so running out mid-flight is a bug)."""
+        if not self.can_alloc(n):
+            raise MemoryError(f"alloc({n}): only {self.n_free} pages free")
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p == SCRATCH_PAGE:
+                raise ValueError("page 0 is the reserved scratch page")
+            if p not in self._used:
+                raise ValueError(f"double free of page {p}")
+            self._used.remove(p)
+            self._free.append(p)
+
+    def utilization(self) -> float:
+        """Fraction of allocatable pages currently in use."""
+        return self.in_use / (self.capacity - 1)

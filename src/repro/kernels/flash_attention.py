@@ -25,6 +25,15 @@ Two entry points:
 Supports causal and sliding-window (RecurrentGemma local attention)
 masks.  Forward only: training configs use XLA attention + remat; the
 kernel serves prefill.
+
+Paged KV caches (the continuous-batching engine's layout) are served by
+the jnp gather fallback — `core.kvcache.gather_paged_kv` re-materializes
+a request's pages into exactly the contiguous codes+scales layout the
+cache-mode prologue above consumes, then `models.decode_attn.
+dpa_paged_decode_attn` applies the same dequant contract.  A Pallas
+block-table prologue (BlockSpec index_map through the table, so the
+gather never round-trips HBM) is the natural TPU follow-up and slots in
+behind the same entry point.
 """
 from __future__ import annotations
 

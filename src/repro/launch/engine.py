@@ -1,0 +1,446 @@
+"""Continuous-batching serving engine over the paged quantized KV cache.
+
+The static serving path (`launch.serve.generate`) holds a (B, S_max)
+cache: memory sized for the longest request, replicated per batch slot —
+the software analogue of the FPnew lane replication TransDot removes in
+hardware.  This engine removes it the same way: cache storage is a pool
+of fixed-size pages (`core.kvcache` paged layout) shared by every live
+request through per-request block tables, so cache memory scales with
+live tokens, and one jit'd decode step serves a batch of requests at
+*different* positions (per-request rope/mask via vector offsets).
+
+Request lifecycle — admit -> prefill -> decode -> finish/evict:
+
+  admit   : a waiting request is admitted when a decode slot is free and
+            the `PageAllocator` can reserve ceil((prompt + max_new) /
+            page) pages (full reservation, so a request never OOMs
+            mid-decode; pages are reused off the free list).
+  prefill : the prompt runs in fixed-size chunks against a contiguous
+            (1, S_max) *staging* cache — the PR-2 quantized-cache path,
+            unchanged — then the staged rows scatter into the request's
+            pages (`write_prefill_rows`, pure relayout, bit-identical
+            codes/scales).  The final chunk's logits yield the first
+            generated token.
+  decode  : all running requests step together through one fixed-shape
+            jit'd call; each slot writes its token into its own page
+            (`paged_write_token`) and attends through its block-table row
+            (`dpa_paged_decode_attn`).  Idle slots point at the scratch
+            page and are ignored.
+  finish  : on max_new (or eos) the request's pages return to the free
+            list and its table row resets to scratch — eviction is page
+            reuse, not memory churn.
+
+The scheduler is token-budgeted: every step spends up to
+`EngineConfig.token_budget` tokens — one per running decode request
+first (decode latency is the serving SLO), the remainder on prefill
+chunks of the oldest admitted request — so long prompts cannot starve
+in-flight generations (chunked-prefill interleaving, the
+Sarathi/DPUV4E-style scheduler-over-shared-engine structure).
+
+Numerics contract: every path reuses the PR-2 quantized-cache machinery
+(same `quant_rows_grid` recipe, same dequant-in-prologue attention), and
+paging is pure relayout, so per-request greedy outputs are bit-identical
+to the static-batch `serve.generate` path (pinned by
+`tests/test_engine.py`).
+
+Entry points: `Engine` (programmatic), `synthetic_workload` (open-loop
+Poisson traffic), `python -m repro.launch.serve --engine` (CLI demo).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import kvcache as KV
+from repro.core.policy import get_policy
+from repro.distributed.step import make_serve_step
+
+WAITING, PREFILL, DECODE, FINISHED = "waiting", "prefill", "decode", "done"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine geometry + scheduler knobs.
+
+    S_max per request = max_pages_per_req * page_size (the block-table
+    width bounds a request's timeline, not the pool's memory)."""
+    page_size: int = 16
+    n_pages: int = 64            # pool capacity (page 0 is scratch)
+    max_batch: int = 4           # concurrent decode slots
+    max_pages_per_req: int = 8   # block-table width
+    token_budget: int = 16       # tokens per scheduler step
+    prefill_chunk: int = 8       # prompt tokens per prefill call
+    eos_id: int = -1             # stop token (-1: run to max_new)
+
+    @property
+    def s_max(self) -> int:
+        return self.max_pages_per_req * self.page_size
+
+
+@dataclasses.dataclass
+class Request:
+    """One serving request plus its lifecycle/accounting state."""
+    rid: int
+    prompt: np.ndarray           # (S0,) int32 token ids
+    max_new: int
+    arrival: float = 0.0         # seconds after engine start (open loop)
+    # -- runtime state (engine-owned) --
+    state: str = WAITING
+    out_tokens: list = dataclasses.field(default_factory=list)
+    pages: list = dataclasses.field(default_factory=list)
+    slot: int = -1
+    pos: int = 0                 # tokens written to the cache so far
+    prefill_done: int = 0
+    t_admit: float = 0.0
+    t_first: float = 0.0         # first generated token (TTFT anchor)
+    t_finish: float = 0.0
+
+    @property
+    def n_prompt(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def n_generated(self) -> int:
+        return len(self.out_tokens)
+
+    def tokens(self) -> np.ndarray:
+        """prompt + generated, the static path's (S0 + max_new,) layout."""
+        return np.concatenate([self.prompt,
+                               np.asarray(self.out_tokens, np.int32)])
+
+
+def synthetic_workload(n_requests: int, *, vocab: int, seed: int = 0,
+                       rate: float = 0.0, prompt_range=(8, 32),
+                       gen_range=(4, 16)) -> List[Request]:
+    """Open-loop synthetic traffic: Poisson arrivals (exponential
+    inter-arrival at `rate` req/s; rate 0 = all arrive at t=0), prompt
+    and output lengths uniform over the given inclusive ranges."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests)) \
+        if rate > 0 else np.zeros(n_requests)
+    reqs = []
+    for i in range(n_requests):
+        s0 = int(rng.integers(prompt_range[0], prompt_range[1] + 1))
+        gen = int(rng.integers(gen_range[0], gen_range[1] + 1))
+        prompt = rng.integers(0, vocab, size=s0).astype(np.int32)
+        reqs.append(Request(rid=i, prompt=prompt, max_new=gen,
+                            arrival=float(arrivals[i])))
+    return reqs
+
+
+def _attn_group_kinds(cfg):
+    """(pattern, n_groups, tail) with the engine's support check."""
+    from repro.models.transformer import family_pattern
+    pattern = family_pattern(cfg)
+    if set(pattern) != {"attn"}:
+        raise ValueError(
+            f"engine serves uniform-attention decoder stacks; {cfg.name} "
+            f"has pattern {pattern} (sliding-window/recurrent blocks keep "
+            "per-slot state the paged cache does not model)")
+    n_groups, tail = divmod(cfg.n_layers, len(pattern))
+    return pattern, n_groups, tail
+
+
+class Engine:
+    """Continuous-batching engine bound to one model + params."""
+
+    def __init__(self, model, params, ecfg: EngineConfig):
+        cfg = model.cfg
+        pol = get_policy(cfg.policy)
+        if not pol.kv_quantized:
+            raise ValueError(
+                f"policy {cfg.policy!r} keeps a raw f32 cache; the paged "
+                "engine stores format-width codes — pick a fmt_kv preset "
+                "(e.g. kv8_attn_f32 for f32 arithmetic over an fp8 cache)")
+        if ecfg.s_max % ecfg.prefill_chunk:
+            # the last chunk's fixed-size window must stay inside the
+            # staging cache (dynamic_update_slice clamps, which would
+            # shift the write over real rows)
+            raise ValueError(f"S_max ({ecfg.s_max}) must be a multiple of "
+                             f"prefill_chunk ({ecfg.prefill_chunk})")
+        _, self._n_groups, self._n_tail = _attn_group_kinds(cfg)
+        self.model, self.params, self.ecfg = model, params, ecfg
+        self.cfg, self.pol = cfg, pol
+        self.alloc = KV.PageAllocator(ecfg.n_pages)
+        self._table = np.full((ecfg.max_batch, ecfg.max_pages_per_req),
+                              KV.SCRATCH_PAGE, np.int32)
+        self.caches = self._init_paged_caches()
+        # staging cache for chunked prefill: the contiguous PR-2 layout
+        self._staging = model.init_caches(1, ecfg.s_max)
+        self._prefill_fn = jax.jit(model.decode_step)
+        self._decode_fn = jax.jit(make_serve_step(model),
+                                  donate_argnums=(2,))
+        self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
+        self.waiting: List[Request] = []
+        self._tables_dirty = False
+        self.finished: List[Request] = []
+        self.peak_live_tokens = 0
+        self.n_steps = 0
+
+    # -- cache plumbing ----------------------------------------------------
+
+    def _init_paged_caches(self):
+        """Paged pools in the model's scanned-cache structure: every leaf
+        gains a leading (n_groups,) dim; per-layer pools are independent
+        but share the one block table (vLLM-style: a request's page ids
+        index every layer's pool)."""
+        e, cfg = self.ecfg, self.cfg
+        one = dict(KV.init_paged_kv_cache(e.n_pages, e.page_size,
+                                          cfg.n_kv_heads, cfg.hd,
+                                          fmt=self.pol.fmt_kv,
+                                          packed=self.pol.kv_packed),
+                   block_table=jnp.asarray(self._table))
+        g = jax.tree.map(
+            lambda x: jnp.array(jnp.broadcast_to(
+                x[None], (self._n_groups,) + x.shape)), one)
+        tail = [jax.tree.map(jnp.array, one) for _ in range(self._n_tail)]
+        return {"groups": {"p0": g}, "tail": tail}
+
+    def _sync_tables(self):
+        """Push the host block table into every layer's cache leaf."""
+        t = jnp.asarray(self._table)
+        g = self.caches["groups"]["p0"]
+        g = dict(g, block_table=jnp.asarray(np.ascontiguousarray(
+            np.broadcast_to(self._table[None],
+                            (self._n_groups,) + self._table.shape))))
+        tail = [dict(c, block_table=t) for c in self.caches["tail"]]
+        self.caches = {"groups": {"p0": g}, "tail": tail}
+
+    def _scatter_staging_to_pages(self, req: Request):
+        """Copy the staged prompt rows into the request's pages (pure
+        relayout; see `core.kvcache.write_prefill_rows`)."""
+        n = req.n_prompt
+        ids = req.pages
+
+        def copy_group(pages, staged):
+            rows = {k: staged[k][0] for k in KV.QUANT_KEYS}
+            return KV.write_prefill_rows(pages, rows, ids, n)
+
+        g = self.caches["groups"]["p0"]
+        sg = self._staging["groups"]["p0"]
+        g = jax.vmap(copy_group)({k: g[k] for k in KV.QUANT_KEYS},
+                                 {k: sg[k] for k in KV.QUANT_KEYS})
+        self.caches["groups"]["p0"] = dict(self.caches["groups"]["p0"], **g)
+        for i, (pc, sc) in enumerate(zip(self.caches["tail"],
+                                         self._staging["tail"])):
+            rows = {k: sc[k][0] for k in KV.QUANT_KEYS}
+            self.caches["tail"][i] = KV.write_prefill_rows(pc, rows, ids, n)
+
+    # -- lifecycle ---------------------------------------------------------
+
+    def submit(self, req: Request):
+        e = self.ecfg
+        total = req.n_prompt + req.max_new
+        if total > e.s_max:
+            raise ValueError(f"request {req.rid}: {total} tokens exceed "
+                             f"S_max = {e.s_max} "
+                             "(raise max_pages_per_req or page_size)")
+        if -(-total // e.page_size) > self.alloc.capacity - 1:
+            raise ValueError(f"request {req.rid} can never fit the pool")
+        req.state = WAITING
+        self.waiting.append(req)
+
+    def _admit(self, now: float):
+        for slot in range(self.ecfg.max_batch):
+            if self.slots[slot] is not None or not self.waiting:
+                continue
+            req = self.waiting[0]
+            n_pages = -(-(req.n_prompt + req.max_new) // self.ecfg.page_size)
+            if not self.alloc.can_alloc(n_pages):
+                break                      # FIFO: don't starve the head
+            self.waiting.pop(0)
+            req.pages = self.alloc.alloc(n_pages)
+            req.slot, req.state, req.t_admit = slot, PREFILL, now
+            self.slots[slot] = req
+            # the table row stays scratch until prefill lands: a PREFILL
+            # slot rides decode steps as idle and must not touch its pages
+
+    def _finish(self, req: Request, now: float):
+        self.alloc.free(req.pages)
+        req.pages = []
+        self._table[req.slot] = KV.SCRATCH_PAGE
+        self.slots[req.slot] = None
+        req.slot = -1
+        req.state, req.t_finish = FINISHED, now
+        self.finished.append(req)
+        self._tables_dirty = True
+
+    def _prefill_step(self, req: Request, now: float) -> int:
+        """Run one prompt chunk; returns real tokens consumed."""
+        e = self.ecfg
+        c0 = req.prefill_done
+        n = min(e.prefill_chunk, req.n_prompt - c0)
+        chunk = np.zeros((1, e.prefill_chunk), np.int32)
+        chunk[0, :n] = req.prompt[c0:c0 + n]
+        logits, self._staging = self._prefill_fn(
+            self.params, {"tokens": jnp.asarray(chunk),
+                          "index": jnp.int32(c0)}, self._staging)
+        req.prefill_done += n
+        if req.prefill_done == req.n_prompt:
+            self._scatter_staging_to_pages(req)
+            self._table[req.slot, :len(req.pages)] = req.pages
+            self._tables_dirty = True
+            first = int(jnp.argmax(logits[0, n - 1]))
+            req.out_tokens.append(first)
+            req.pos = req.n_prompt
+            req.state, req.t_first = DECODE, now
+            self._maybe_finish(req, first, now)
+        return n
+
+    def _decode_batch(self, now: float) -> int:
+        """One batched decode step over every DECODE-state slot."""
+        e = self.ecfg
+        live = [r for r in self.slots if r is not None and r.state == DECODE]
+        if not live:
+            return 0
+        tokens = np.zeros((e.max_batch, 1), np.int32)
+        positions = np.zeros((e.max_batch,), np.int32)
+        for r in live:
+            tokens[r.slot, 0] = r.out_tokens[-1]
+            positions[r.slot] = r.pos
+        nxt, self.caches = self._decode_fn(
+            self.params, {"tokens": jnp.asarray(tokens),
+                          "index": jnp.asarray(positions)}, self.caches)
+        nxt = np.asarray(nxt)
+        for r in live:
+            tok = int(nxt[r.slot])
+            r.pos += 1
+            r.out_tokens.append(tok)
+            self._maybe_finish(r, tok, now)
+        return len(live)
+
+    def _maybe_finish(self, req: Request, tok: int, now: float):
+        if req.n_generated >= req.max_new or tok == self.ecfg.eos_id:
+            self._finish(req, now)
+
+    def step(self, now: float = 0.0):
+        """One scheduler tick: admit, decode the running batch, spend the
+        leftover token budget on prefill chunks."""
+        self._admit(now)
+        budget = self.ecfg.token_budget
+        budget -= self._decode_batch(now)
+        while budget > 0:
+            pre = [r for r in self.slots
+                   if r is not None and r.state == PREFILL]
+            if not pre:
+                break
+            # a partially-prefilled request MUST keep the baton until its
+            # prompt is fully staged: the staging cache is shared, so
+            # switching mid-prefill would interleave two prompts' rows
+            # (there is at most one partial request by induction).  Ties
+            # on t_admit (same tick) then break by admission order (rid)
+            budget -= self._prefill_step(
+                min(pre, key=lambda r: (r.prefill_done == 0,
+                                        r.t_admit, r.rid)), now)
+        self._admit(now)        # freed slots/pages admit within the tick
+        if self._tables_dirty:
+            # one device sync per tick, after all finish/prefill events —
+            # the next tick's decode reads tables through the cache pytree.
+            # Deferring past _finish is safe: the freed slot's stale row
+            # only matters to decode, which never runs before this sync
+            self._sync_tables()
+            self._tables_dirty = False
+        self.peak_live_tokens = max(self.peak_live_tokens,
+                                    self.live_tokens())
+        self.n_steps += 1
+
+    def live_tokens(self) -> int:
+        return sum(r.pos for r in self.slots if r is not None)
+
+    def reset_stats(self):
+        """Clear accounting between workloads (keeps compiled steps and
+        the page pool; only legal when nothing is in flight)."""
+        if any(self.slots) or self.waiting:
+            raise RuntimeError("reset_stats with requests in flight")
+        self.finished = []
+        self.peak_live_tokens = 0
+        self.n_steps = 0
+        self.alloc.peak_in_use = self.alloc.in_use
+
+    def run(self, requests: List[Request]) -> dict:
+        """Serve an open-loop workload to completion; returns `report()`.
+
+        Requests arrive at wall-clock `arrival` offsets; the engine idles
+        (sleeps) when nothing is live and the next arrival is in the
+        future."""
+        pending = sorted(requests, key=lambda r: r.arrival)
+        t0 = time.monotonic()
+        while pending or self.waiting or any(self.slots):
+            now = time.monotonic() - t0
+            while pending and pending[0].arrival <= now:
+                self.submit(pending.pop(0))
+            if not self.waiting and not any(self.slots):
+                time.sleep(min(0.001, max(0.0,
+                                          pending[0].arrival - now)))
+                continue
+            self.step(now)
+        wall = time.monotonic() - t0
+        return self.report(wall)
+
+    # -- accounting --------------------------------------------------------
+
+    def kv_bytes_report(self) -> dict:
+        """Cache bytes from *actual per-request lengths* (live or peak
+        tokens), vs the static (B, S_max) baselines — both the f32 seed
+        cache and the format-width static cache the engine replaces."""
+        e, cfg, pol = self.ecfg, self.cfg, self.pol
+        n_attn = self._n_groups + self._n_tail
+        live = KV.paged_kv_cache_nbytes(
+            self.peak_live_tokens, self.alloc.peak_in_use, e.page_size,
+            cfg.n_kv_heads, cfg.hd, fmt=pol.fmt_kv, packed=pol.kv_packed)
+        static = KV.kv_cache_nbytes(e.max_batch, e.s_max, cfg.n_kv_heads,
+                                    cfg.hd, fmt=pol.fmt_kv,
+                                    packed=pol.kv_packed)
+        return {
+            "live_bytes": live["live"] * n_attn,
+            "paged_bytes": live["paged"] * n_attn,
+            "static_bytes": static["total"] * n_attn,
+            "static_f32_bytes": static["f32_total"] * n_attn,
+            "peak_live_tokens": self.peak_live_tokens,
+            "page_util": self.alloc.peak_in_use / (self.alloc.capacity - 1),
+            "pages_peak": self.alloc.peak_in_use,
+            "pages_total": self.alloc.capacity - 1,
+        }
+
+    def report(self, wall: float) -> dict:
+        lat = np.array([r.t_finish - r.arrival for r in self.finished])
+        ttft = np.array([r.t_first - r.arrival for r in self.finished])
+        gen = sum(r.n_generated for r in self.finished)
+        kv = self.kv_bytes_report()
+        return {
+            "n_requests": len(self.finished),
+            "wall_s": wall,
+            "steps": self.n_steps,
+            "gen_tokens": gen,
+            "tokens_per_s": gen / wall if wall > 0 else float("inf"),
+            "p50_latency_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
+            "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else 0.0,
+            "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else 0.0,
+            **kv,
+        }
+
+
+def format_report(rep: dict, policy: str) -> str:
+    """The serve.py report lines: throughput/latency + honest cache bytes
+    (counted from actual per-request lengths, not B x S_max) + page-
+    allocator utilization."""
+    mb = 1e6
+    return (
+        f"engine: {rep['n_requests']} reqs, {rep['gen_tokens']} tokens in "
+        f"{rep['wall_s']:.2f}s ({rep['tokens_per_s']:.1f} tok/s, "
+        f"{rep['steps']} steps, policy={policy})\n"
+        f"latency: p50 {rep['p50_latency_s'] * 1e3:.0f} ms, "
+        f"p99 {rep['p99_latency_s'] * 1e3:.0f} ms, "
+        f"ttft p50 {rep['p50_ttft_s'] * 1e3:.0f} ms\n"
+        f"kv-cache: peak live {rep['live_bytes'] / mb:.2f} MB "
+        f"({rep['peak_live_tokens']} tokens) in "
+        f"{rep['paged_bytes'] / mb:.2f} MB of pages vs static "
+        f"{rep['static_bytes'] / mb:.2f} MB (B x S_max, same format) / "
+        f"f32 {rep['static_f32_bytes'] / mb:.2f} MB; "
+        f"page util peak {rep['page_util']:.0%} "
+        f"({rep['pages_peak']}/{rep['pages_total']} pages)")

@@ -10,6 +10,20 @@ bytes.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
       --batch 4 --prompt-len 32 --gen 16 --policy kv4_attn8_packed
+
+Two modes:
+
+  static (default) : one rigid (B, S_max) batch stepped in lockstep —
+      every request pays for the longest sequence.  Its report prices the
+      cache at B x S_max, because that is what this mode really holds.
+  --engine : the continuous-batching engine (`repro.launch.engine`) over
+      the *paged* quantized KV cache — mixed-length requests under
+      open-loop Poisson traffic, cache memory proportional to live
+      tokens, and a report that counts KV bytes from actual per-request
+      lengths plus page-allocator utilization (see `docs/serving.md`).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --reduced \
+      --engine --requests 16 --rate 50 --policy kv4_attn8_packed
 """
 from __future__ import annotations
 
@@ -68,6 +82,36 @@ def generate(model, params, prompt, n_gen: int, s_ctx: int):
     return jnp.concatenate(toks, axis=1)
 
 
+def run_engine(cfg, model, args):
+    """--engine mode: continuous batching over the paged quantized cache,
+    driven by an open-loop synthetic workload."""
+    from repro.launch.engine import (Engine, EngineConfig, format_report,
+                                     synthetic_workload)
+    ecfg = EngineConfig(page_size=args.page_size, n_pages=args.pages,
+                        max_batch=args.max_batch or args.batch,
+                        max_pages_per_req=args.max_pages_per_req,
+                        token_budget=args.token_budget,
+                        prefill_chunk=args.prefill_chunk)
+    if args.prompt_len + args.gen > ecfg.s_max:
+        raise SystemExit(
+            f"--prompt-len {args.prompt_len} + --gen {args.gen} exceeds the "
+            f"engine's S_max = {ecfg.s_max} tokens/request; raise "
+            "--max-pages-per-req or --page-size")
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, ecfg)
+    reqs = synthetic_workload(
+        args.requests, vocab=cfg.vocab_size, seed=args.seed,
+        rate=args.rate, prompt_range=(max(1, args.prompt_len // 2),
+                                      args.prompt_len),
+        gen_range=(max(1, args.gen // 2), args.gen))
+    rep = engine.run(reqs)
+    print(format_report(rep, cfg.policy))
+    if engine.finished:
+        sample = engine.finished[0]
+        print(f"sample (req {sample.rid}): {sample.tokens()[:24].tolist()}")
+    return rep
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -77,18 +121,39 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--policy", default=None)
     ap.add_argument("--n-model", type=int, default=1)
+    eg = ap.add_argument_group("engine", "continuous-batching mode")
+    eg.add_argument("--engine", action="store_true",
+                    help="serve with the paged-cache engine")
+    eg.add_argument("--page-size", type=int, default=16)
+    eg.add_argument("--pages", type=int, default=128,
+                    help="page-pool capacity (page 0 is scratch)")
+    eg.add_argument("--max-batch", type=int, default=0,
+                    help="decode slots (default: --batch)")
+    eg.add_argument("--max-pages-per-req", type=int, default=8)
+    eg.add_argument("--token-budget", type=int, default=32,
+                    help="tokens per scheduler step")
+    eg.add_argument("--prefill-chunk", type=int, default=16)
+    eg.add_argument("--requests", type=int, default=16)
+    eg.add_argument("--rate", type=float, default=0.0,
+                    help="Poisson arrival rate, req/s (0 = all at t=0)")
+    eg.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduce_config(cfg)
+    if args.engine and not args.policy:
+        args.policy = "kv4_attn8_packed"    # engine needs a fmt_kv preset
     if args.policy:
         cfg = cfg.replace(policy=args.policy)
     if cfg.family in ("encdec", "vlm") or cfg.frontend == "stub":
         raise SystemExit("serve demo targets token-in/token-out archs")
     model = build_model(cfg)
-    print(report_kv_cache(cfg, args.batch, args.prompt_len + args.gen))
     mesh = make_host_mesh(n_model=args.n_model)
+    if args.engine:
+        with mesh:
+            return run_engine(cfg, model, args)
+    print(report_kv_cache(cfg, args.batch, args.prompt_len + args.gen))
     with mesh:
         params = model.init(jax.random.PRNGKey(0))
         prompt = jax.random.randint(jax.random.PRNGKey(1),

@@ -8,7 +8,11 @@ The jnp face of the DPA attention contract (kernel face:
 f32 over operands absmax-quantized onto a Table-I format grid, and the
 softmax max/denominator stay f32.  These run under plain XLA, so they
 serve every shape the Pallas kernel's block constraints exclude (and all
-decode steps, where Sq == 1).  They define the *semantics* of the path;
+decode steps, where Sq == 1).  `dpa_paged_decode_attn` is the serving-
+engine variant: same contract, but K/V codes are read through a block
+table over the paged cache (`core.kvcache` paged layout) with a
+per-request causal mask, so one batched step serves requests of mixed
+lengths.  They define the *semantics* of the path;
 the *bandwidth* claim belongs to the kernel's kv_quant mode, whose
 BlockSpec moves cache codes+scales HBM->VMEM and widens in the prologue
 — here the dequantized K/V is an ordinary XLA f32 intermediate (the HBM
@@ -103,6 +107,34 @@ def dpa_decode_attn(q, cache, offset, *, fmt: str, fmt_kv: str,
     s_ctx = k.shape[1]
     valid = jnp.arange(s_ctx) <= jnp.asarray(offset, jnp.int32)
     mask = valid[None, None, None, :]
+    return dpa_attention(q, k, v, mask, fmt=fmt, scale=scale,
+                         kv_on_grid=True)
+
+
+def dpa_paged_decode_attn(q, cache, positions, *, fmt: str, fmt_kv: str,
+                          kv_packed: bool, scale):
+    """One decode step against a *paged* quantized KV cache.
+
+    q: (B,1,H,hd) (already rope'd at per-request positions); cache: paged
+    `repro.core.kvcache` pytree (page pool + (B, max_pages) block table);
+    positions: (B,) i32 — request b's current token index.  The block
+    table gathers each request's pages into timeline order (pure relayout,
+    bit-identical codes/scales to a contiguous cache), the prologue widens
+    them (codes * per-row scale), and both matmuls accumulate f32 over
+    fmt-grid operands — the same contract as `dpa_decode_attn`, with the
+    causal mask per request: row b attends key slots <= positions[b]
+    (slots past a request's live length come from scratch/stale pages and
+    are masked off here)."""
+    from repro.core.kvcache import dequantize_kv, gather_paged_kv
+    view = gather_paged_kv(cache)
+    k = dequantize_kv(view["k_codes"], view["k_scale"], fmt=fmt_kv,
+                      packed=kv_packed)
+    v = dequantize_kv(view["v_codes"], view["v_scale"], fmt=fmt_kv,
+                      packed=kv_packed)
+    s_view = k.shape[1]
+    pos = jnp.asarray(positions, jnp.int32)
+    valid = jnp.arange(s_view)[None, :] <= pos[:, None]     # (B, S_view)
+    mask = valid[:, None, None, :]
     return dpa_attention(q, k, v, mask, fmt=fmt, scale=scale,
                          kv_on_grid=True)
 

@@ -45,14 +45,21 @@ def apply_norm(params, x, *, eps: float = 1e-5):
 # -----------------------------------------------------------------------------
 
 def rope(x, positions, theta: float):
-    """x: (B, S, H, hd), positions: (S,) int32."""
+    """x: (B, S, H, hd), positions: (S,) int32 — or (B, S) for per-request
+    timelines (the continuous-batching decode step, where each batch slot
+    sits at its own position).  The 2D path computes the identical
+    angle-per-position values, just broadcast per batch row."""
     hd = x.shape[-1]
     half = hd // 2
     freqs = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32)
                     / half)
-    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]  # (S, half)
-    cos = jnp.cos(ang)[None, :, None, :]
-    sin = jnp.sin(ang)[None, :, None, :]
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    if ang.ndim == 3:                                       # (B, S, half)
+        cos = jnp.cos(ang)[:, :, None, :]
+        sin = jnp.sin(ang)[:, :, None, :]
+    else:
+        cos = jnp.cos(ang)[None, :, None, :]
+        sin = jnp.sin(ang)[None, :, None, :]
     x1, x2 = x[..., :half], x[..., half:]
     out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
     return out.astype(x.dtype)
@@ -175,7 +182,10 @@ def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
         k = apply_norm(params["k_norm"], k, eps=cfg.norm_eps) \
             if cross_kv is None else k
     if use_rope and cross_kv is None:
-        pos = offset + jnp.arange(Sq)
+        if jnp.ndim(offset) == 1:   # per-request timelines (paged decode)
+            pos = jnp.asarray(offset)[:, None] + jnp.arange(Sq)[None]
+        else:
+            pos = offset + jnp.arange(Sq)
         q = rope(q, pos, cfg.rope_theta)
         k = rope(k, pos, cfg.rope_theta)
 
@@ -204,6 +214,30 @@ def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
                             "data", None, "model")
             y = apply_linear(params["wo"], y, policy)
             return maybe_shard(y, "data", "model", None), {"k": kc, "v": vc}
+    if cache is not None and cross_kv is None and "block_table" in cache:
+        # paged quantized KV cache (the continuous-batching engine's
+        # layout): `offset` is a (B,) vector of per-request positions.
+        # The new token quantizes into its request's page, attention
+        # reads codes through the block table — same prologue-dequant
+        # contract as the contiguous branch below, bit-identical values
+        if Sq != 1:
+            raise ValueError("paged KV caches serve the decode step only "
+                             "(Sq == 1); prefill runs against a "
+                             "contiguous staging cache — see launch.engine")
+        from repro.core import kvcache as KV
+        from repro.models.decode_attn import dpa_paged_decode_attn
+        new_cache = KV.paged_write_token(cache, k, v, offset,
+                                         fmt=policy.fmt_kv,
+                                         packed=policy.kv_packed)
+        y = dpa_paged_decode_attn(q, new_cache, offset,
+                                  fmt=policy.fmt_attn,
+                                  fmt_kv=policy.fmt_kv,
+                                  kv_packed=policy.kv_packed,
+                                  scale=hd ** -0.5)
+        y = maybe_shard(y.reshape(B, Sq, cfg.n_heads * hd),
+                        "data", None, "model")
+        y = apply_linear(params["wo"], y, policy)
+        return maybe_shard(y, "data", "model", None), new_cache
     if cache is not None and cross_kv is None and "k_codes" in cache:
         # quantized KV cache (full mode): new rows quantize into the
         # format-width cache; attention consumes dequantized-in-prologue

@@ -1,0 +1,177 @@
+"""Continuous-batching engine end-to-end: per-request greedy outputs
+must equal the static-batch `launch.serve.generate` path, with cache
+memory scaling by live tokens and pages evicted back to the free list.
+
+The equality claim is exact (token-for-token), not approximate: paging
+is pure relayout, the engine's prefill runs the same quantized-cache
+path as the static driver, and the paged decode step is bit-identical to
+the contiguous one (see `tests/test_paged_kv.py`), so greedy argmax must
+agree even on random-init near-flat logits.  The static reference runs
+at the engine's S_max so both paths mask/reduce over identical shapes.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduce_config
+from repro.launch.engine import (Engine, EngineConfig, Request,
+                                 synthetic_workload)
+from repro.launch.serve import generate
+from repro.models import build_model
+
+POLICY = "kv4_attn8_packed"
+ECFG = EngineConfig(page_size=8, n_pages=32, max_batch=3,
+                    max_pages_per_req=4, token_budget=8, prefill_chunk=8)
+# mixed prompt/output lengths: partial pages, multi-page prompts, more
+# requests than decode slots (continuous batching, not one static batch)
+LENS = [(9, 5), (14, 7), (5, 4), (20, 6), (11, 8)]
+
+
+@pytest.fixture(scope="module")
+def model_and_params():
+    cfg = reduce_config(get_config("qwen3-4b")).replace(policy=POLICY)
+    model = build_model(cfg)
+    return model, model.init(jax.random.PRNGKey(0))
+
+
+def _requests(vocab, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=s0).astype(np.int32),
+                    max_new=g)
+            for i, (s0, g) in enumerate(LENS)]
+
+
+@pytest.fixture(scope="module")
+def served(model_and_params):
+    model, params = model_and_params
+    engine = Engine(model, params, ECFG)
+    reqs = _requests(model.cfg.vocab_size)
+    report = engine.run(reqs)
+    return engine, report
+
+
+def test_engine_matches_static_batch_per_request(model_and_params, served):
+    model, params = model_and_params
+    engine, _ = served
+    for req in _requests(model.cfg.vocab_size):
+        out = generate(model, params, jnp.asarray(req.prompt[None]),
+                       req.max_new, ECFG.s_max)
+        want = np.asarray(out)[0, req.n_prompt:]
+        got = [r for r in engine.finished if r.rid == req.rid][0]
+        assert np.array_equal(np.asarray(got.out_tokens), want), req.rid
+        # and the full tokens() timeline matches the static layout
+        assert np.array_equal(got.tokens(), np.asarray(out)[0])
+
+
+def test_engine_finishes_and_evicts(served):
+    engine, report = served
+    assert report["n_requests"] == len(LENS)
+    assert report["gen_tokens"] == sum(g for _, g in LENS)
+    # eviction: every page returned to the free list, slots idle
+    assert engine.alloc.in_use == 0
+    assert all(s is None for s in engine.slots)
+    assert engine.alloc.peak_in_use > 0
+    assert np.all(engine._table == 0)          # all rows back to scratch
+
+
+def test_engine_report_counts_live_tokens_not_b_smax(served):
+    _, report = served
+    # honest accounting: live <= paged (page granularity) < static layouts
+    assert 0 < report["live_bytes"] <= report["paged_bytes"]
+    assert report["paged_bytes"] < report["static_bytes"]
+    assert report["static_bytes"] < report["static_f32_bytes"]
+    assert 0.0 < report["page_util"] <= 1.0
+    assert report["p50_latency_s"] <= report["p99_latency_s"]
+    assert report["tokens_per_s"] > 0
+
+
+def test_engine_poisson_open_loop(model_and_params):
+    """Arrivals spread in time (open loop) still drain completely, with
+    deterministic workload shapes from the seed."""
+    model, params = model_and_params
+    engine = Engine(model, params, ECFG)
+    reqs = synthetic_workload(6, vocab=model.cfg.vocab_size, seed=1,
+                              rate=200.0, prompt_range=(4, 12),
+                              gen_range=(2, 5))
+    assert all(reqs[i].arrival <= reqs[i + 1].arrival
+               for i in range(len(reqs) - 1))
+    report = engine.run(reqs)
+    assert report["n_requests"] == 6
+    assert engine.alloc.in_use == 0
+
+
+def test_engine_queues_when_pool_is_tight(model_and_params):
+    """A pool smaller than the aggregate demand forces waiting-queue
+    admission control; everything still completes via page reuse."""
+    model, params = model_and_params
+    ecfg = EngineConfig(page_size=8, n_pages=8, max_batch=3,
+                        max_pages_per_req=4, token_budget=8,
+                        prefill_chunk=8)
+    engine = Engine(model, params, ecfg)
+    reqs = _requests(model.cfg.vocab_size)      # needs 15 pages total, has 7
+    report = engine.run(reqs)
+    assert report["n_requests"] == len(LENS)
+    assert engine.alloc.peak_in_use <= 7
+
+
+def test_prefill_baton_survives_same_tick_admission(model_and_params):
+    """A partially-prefilled request must keep the (shared) staging cache
+    until its prompt is fully staged.  Regression: a request admitted
+    later in the *same tick* (after a finish freed a lower slot) used to
+    tie on t_admit and steal the prefill baton by slot order,
+    interleaving two prompts' rows in staging — silently corrupting both
+    requests' outputs."""
+    model, params = model_and_params
+    ecfg = EngineConfig(page_size=8, n_pages=32, max_batch=2,
+                        max_pages_per_req=4, token_budget=8,
+                        prefill_chunk=8)
+    engine = Engine(model, params, ecfg)
+    rng = np.random.default_rng(7)
+    V = model.cfg.vocab_size
+    # X finishes fast, freeing slot 0 mid-tick while A (2.5 chunks) is
+    # still prefilling; B then admits into slot 0 with A's t_admit
+    x = Request(rid=0, prompt=rng.integers(0, V, 8).astype(np.int32),
+                max_new=2)
+    a = Request(rid=1, prompt=rng.integers(0, V, 20).astype(np.int32),
+                max_new=4)
+    b = Request(rid=2, prompt=rng.integers(0, V, 20).astype(np.int32),
+                max_new=4)
+    engine.submit(x)
+    engine.step(0.0)
+    engine.submit(a)
+    engine.submit(b)
+    now = 1.0
+    while any(engine.slots) or engine.waiting:
+        engine.step(now)
+        now += 1.0
+    for req in (x, a, b):
+        out = generate(model, params, jnp.asarray(req.prompt[None]),
+                       req.max_new, ecfg.s_max)
+        want = np.asarray(out)[0, req.n_prompt:]
+        assert np.array_equal(np.asarray(req.out_tokens), want), req.rid
+
+
+def test_engine_rejects_raw_cache_policy(model_and_params):
+    model, _ = model_and_params
+    cfg = model.cfg.replace(policy="fp32")
+    m2 = build_model(cfg)
+    with pytest.raises(ValueError, match="fmt_kv"):
+        Engine(m2, None, ECFG)
+
+
+def test_engine_rejects_oversized_request(model_and_params, served):
+    model, params = model_and_params
+    engine, _ = served
+    big = Request(rid=99, prompt=np.zeros(ECFG.s_max, np.int32), max_new=1)
+    with pytest.raises(ValueError, match="S_max"):
+        engine.submit(big)
+
+
+def test_engine_rejects_misaligned_prefill_chunk(model_and_params):
+    model, params = model_and_params
+    with pytest.raises(ValueError, match="prefill_chunk"):
+        Engine(model, params, EngineConfig(page_size=8, max_pages_per_req=4,
+                                           prefill_chunk=7))

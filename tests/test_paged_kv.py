@@ -1,0 +1,237 @@
+"""Paged KV cache conformance: paged-vs-contiguous bit-identity across
+every Table-I KV format (packed fp4 included, at odd lengths crossing
+page boundaries), allocator reuse/eviction invariants, and the paged
+decode attention path vs the contiguous one.
+
+The load-bearing claim: paging is *pure relayout*.  A page pool + block
+table must hold codes and scales bit-identical to the contiguous cache
+it replaces, whether rows arrive token-by-token (`paged_write_token`,
+the decode path) or as a prefill scatter (`write_prefill_rows`), and the
+attention consuming them (`dpa_paged_decode_attn`) must reproduce the
+contiguous `dpa_decode_attn` bit-for-bit when the gathered view matches
+the contiguous context length.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvcache as KV
+
+# (fmt, packed): every KV format the policy table exposes
+KV_FORMATS = [("fp16", False), ("bf16", False), ("fp8_e4m3", False),
+              ("fp4_e2m1", False), ("fp4_e2m1", True)]
+PS = 8                       # page size: small, so lengths cross pages
+# odd lengths: mid-page tail, single partial page, >2 pages + 1 row
+LENGTHS = [13, 5, 17]
+
+
+def _fmt_id(p):
+    return f"{p[0]}{'_packed' if p[1] else ''}"
+
+
+def _raw_kv(seed, B, S, n_kv=2, hd=16):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    k = jax.random.normal(ks[0], (B, S, n_kv, hd))
+    v = jax.random.normal(ks[1], (B, S, n_kv, hd))
+    return k, v
+
+
+def _alloc_tables(lengths, max_pages, capacity):
+    alloc = KV.PageAllocator(capacity)
+    table = np.full((len(lengths), max_pages), KV.SCRATCH_PAGE, np.int32)
+    pages = []
+    for b, L in enumerate(lengths):
+        ids = alloc.alloc(-(-L // PS))
+        pages.append(ids)
+        table[b, :len(ids)] = ids
+    return alloc, table, pages
+
+
+def _assert_rows_equal(view, ref, lengths):
+    for b, L in enumerate(lengths):
+        for key in KV.QUANT_KEYS:
+            got, want = np.asarray(view[key][b, :L]), np.asarray(ref[key][b, :L])
+            assert got.dtype == want.dtype
+            assert np.array_equal(got, want), (key, b)
+
+
+# -----------------------------------------------------------------------------
+# bit-identity: token writes and prefill scatter vs the contiguous cache
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt,packed", KV_FORMATS, ids=map(_fmt_id, KV_FORMATS))
+def test_paged_token_writes_bit_identical(fmt, packed):
+    """Token-by-token paged writes == contiguous update_kv_cache, for
+    mixed lengths whose partial tails land mid-page."""
+    B, n_kv, hd, max_pages = len(LENGTHS), 2, 16, 3
+    k, v = _raw_kv(0, B, max_pages * PS, n_kv, hd)
+    ref = KV.update_kv_cache(
+        KV.init_kv_cache(B, max_pages * PS, n_kv, hd, fmt=fmt, packed=packed),
+        k, v, 0, fmt=fmt, packed=packed)
+    _, table, _ = _alloc_tables(LENGTHS, max_pages, capacity=16)
+    cache = dict(KV.init_paged_kv_cache(16, PS, n_kv, hd, fmt=fmt,
+                                        packed=packed),
+                 block_table=jnp.asarray(table))
+    for t in range(max(LENGTHS)):
+        live = np.array([t < L for L in LENGTHS])
+        # idle rows write position 0 of their (scratch) table row — the
+        # engine's fixed-shape step; live data must be untouched by it
+        tbl = np.where(live[:, None], table, KV.SCRATCH_PAGE).astype(np.int32)
+        step = dict(cache, block_table=jnp.asarray(tbl))
+        step = KV.paged_write_token(step, k[:, t:t + 1], v[:, t:t + 1],
+                                    jnp.asarray(np.where(live, t, 0)),
+                                    fmt=fmt, packed=packed)
+        cache = dict(step, block_table=jnp.asarray(table))
+    _assert_rows_equal(KV.gather_paged_kv(cache), ref, LENGTHS)
+
+
+@pytest.mark.parametrize("fmt,packed", KV_FORMATS, ids=map(_fmt_id, KV_FORMATS))
+def test_prefill_scatter_bit_identical(fmt, packed):
+    """write_prefill_rows (whole pages + partial tail) == the contiguous
+    staging rows it copies."""
+    B, n_kv, hd, max_pages = len(LENGTHS), 2, 16, 3
+    k, v = _raw_kv(1, B, max_pages * PS, n_kv, hd)
+    ref = KV.update_kv_cache(
+        KV.init_kv_cache(B, max_pages * PS, n_kv, hd, fmt=fmt, packed=packed),
+        k, v, 0, fmt=fmt, packed=packed)
+    _, table, pages = _alloc_tables(LENGTHS, max_pages, capacity=16)
+    cache = dict(KV.init_paged_kv_cache(16, PS, n_kv, hd, fmt=fmt,
+                                        packed=packed),
+                 block_table=jnp.asarray(table))
+    for b, L in enumerate(LENGTHS):
+        rows = {key: ref[key][b] for key in KV.QUANT_KEYS}
+        cache = KV.write_prefill_rows(cache, rows, pages[b], L)
+    _assert_rows_equal(KV.gather_paged_kv(cache), ref, LENGTHS)
+
+
+def test_write_prefill_rows_rejects_short_page_list():
+    cache = KV.init_paged_kv_cache(4, PS, 2, 16, fmt="fp16")
+    rows = {key: jnp.zeros((2 * PS,) + cache[key].shape[2:],
+                           cache[key].dtype) for key in KV.QUANT_KEYS}
+    with pytest.raises(ValueError, match="pages"):
+        KV.write_prefill_rows(cache, rows, [1], PS + 1)
+
+
+def test_gather_view_shape_and_scratch_tail():
+    """The gathered view is (B, max_pages*page, ...) and tail slots past a
+    request's pages read the scratch page (zeros here) — maskable, never
+    out of bounds."""
+    n_kv, hd = 2, 16
+    cache = dict(KV.init_paged_kv_cache(8, PS, n_kv, hd, fmt="fp8_e4m3"),
+                 block_table=jnp.asarray([[1, KV.SCRATCH_PAGE]], np.int32))
+    k, v = _raw_kv(2, 1, PS, n_kv, hd)
+    rows = KV.quantize_kv(k[0], fmt="fp8_e4m3")
+    cache = KV.write_prefill_rows(
+        cache, {"k_codes": rows[0], "k_scale": rows[1],
+                "v_codes": rows[0], "v_scale": rows[1]}, [1], PS)
+    view = KV.gather_paged_kv(cache)
+    assert view["k_codes"].shape == (1, 2 * PS, n_kv, hd)
+    assert np.all(np.asarray(view["k_scale"][0, PS:]) == 0.0)
+
+
+# -----------------------------------------------------------------------------
+# paged decode attention vs the contiguous decode path
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pol_name", ["attn_fp16_dpa", "kv4_attn8_packed"])
+def test_paged_decode_attn_matches_contiguous(pol_name):
+    """dpa_paged_decode_attn == dpa_decode_attn bit-for-bit when the
+    gathered view length equals the contiguous S_ctx (same shapes, same
+    reductions), at per-request positions."""
+    from repro.core import get_policy
+    from repro.models.decode_attn import dpa_decode_attn, dpa_paged_decode_attn
+    pol = get_policy(pol_name)
+    B, H, n_kv, hd, n_pg = 3, 4, 2, 16, 4
+    S = n_pg * PS
+    k, v = _raw_kv(3, B, S, n_kv, hd)
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, 1, H, hd))
+    ref = KV.update_kv_cache(
+        KV.init_kv_cache(B, S, n_kv, hd, fmt=pol.fmt_kv,
+                         packed=pol.kv_packed),
+        k, v, 0, fmt=pol.fmt_kv, packed=pol.kv_packed)
+    _, table, pages = _alloc_tables([S] * B, n_pg, capacity=B * n_pg + 2)
+    cache = dict(KV.init_paged_kv_cache(B * n_pg + 2, PS, n_kv, hd,
+                                        fmt=pol.fmt_kv, packed=pol.kv_packed),
+                 block_table=jnp.asarray(table))
+    for b in range(B):
+        rows = {key: ref[key][b] for key in KV.QUANT_KEYS}
+        cache = KV.write_prefill_rows(cache, rows, pages[b], S)
+    positions = jnp.asarray([5, S - 1, 12], jnp.int32)
+    got = dpa_paged_decode_attn(q, cache, positions, fmt=pol.fmt_attn,
+                                fmt_kv=pol.fmt_kv, kv_packed=pol.kv_packed,
+                                scale=hd ** -0.5)
+    for b in range(B):
+        want = dpa_decode_attn(q[b:b + 1],
+                               {key: ref[key][b:b + 1]
+                                for key in KV.QUANT_KEYS},
+                               int(positions[b]), fmt=pol.fmt_attn,
+                               fmt_kv=pol.fmt_kv, kv_packed=pol.kv_packed,
+                               scale=hd ** -0.5)
+        assert np.array_equal(np.asarray(got[b]), np.asarray(want[0])), b
+
+
+# -----------------------------------------------------------------------------
+# allocator invariants
+# -----------------------------------------------------------------------------
+
+def test_allocator_reserves_scratch_and_exhausts():
+    a = KV.PageAllocator(5)
+    assert a.n_free == 4                       # page 0 reserved
+    got = a.alloc(4)
+    assert KV.SCRATCH_PAGE not in got and len(set(got)) == 4
+    assert not a.can_alloc(1)
+    with pytest.raises(MemoryError):
+        a.alloc(1)
+
+
+def test_allocator_free_list_reuse():
+    """Eviction returns pages for reuse (LIFO: the hottest pages first)."""
+    a = KV.PageAllocator(8)
+    first = a.alloc(3)
+    a.free(first)
+    assert a.in_use == 0 and a.n_free == 7
+    again = a.alloc(3)
+    assert again == first[::-1]                # LIFO reuse order
+    assert a.peak_in_use == 3                  # peak survives the evict
+
+
+def test_allocator_rejects_double_and_scratch_free():
+    a = KV.PageAllocator(4)
+    pages = a.alloc(2)
+    a.free(pages[:1])
+    with pytest.raises(ValueError, match="double free"):
+        a.free(pages[:1])
+    with pytest.raises(ValueError, match="scratch"):
+        a.free([KV.SCRATCH_PAGE])
+    with pytest.raises(ValueError):
+        KV.PageAllocator(1)
+
+
+def test_allocator_utilization():
+    a = KV.PageAllocator(11)
+    a.alloc(5)
+    assert a.utilization() == 0.5
+    assert a.peak_in_use == 5
+
+
+# -----------------------------------------------------------------------------
+# byte accounting: live tokens, not B x S_max
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt,packed", [("fp8_e4m3", False),
+                                        ("fp4_e2m1", True)],
+                         ids=["fp8", "fp4_packed"])
+def test_paged_bytes_scale_with_live_tokens(fmt, packed):
+    n_kv, hd, B, s_max = 2, 64, 8, 256
+    live, pages_used = 300, -(-300 // PS)
+    nb = KV.paged_kv_cache_nbytes(live, pages_used, PS, n_kv, hd,
+                                  fmt=fmt, packed=packed)
+    static = KV.kv_cache_nbytes(B, s_max, n_kv, hd, fmt=fmt, packed=packed)
+    assert nb["live"] <= nb["paged"]           # page-granularity overhead
+    assert nb["paged"] < static["total"]       # << the B x S_max layout
+    # live bytes are exactly per-row bytes x live rows
+    per_row = KV.kv_cache_nbytes(1, 1, n_kv, hd, fmt=fmt,
+                                 packed=packed)["total"]
+    assert nb["live"] == per_row * live

@@ -1,0 +1,98 @@
+"""Markdown link checker for README.md + docs/ (the CI `docs` job).
+
+Dependency-free: walks `[text](target)` links in the checked files and
+verifies
+
+  - relative file targets exist (README.md, docs/*.md, code paths);
+  - intra-repo `#anchor` fragments resolve to a heading in the target
+    markdown file (GitHub slug rules: lowercase, spaces -> dashes,
+    punctuation dropped);
+  - backtick-quoted `src/...` / `tests/...` / `benchmarks/...` path
+    mentions in the docs point at real files — docs that name code must
+    not rot.
+
+http(s) links are not fetched (CI should not depend on the network);
+they are only checked for obvious malformation.
+
+Usage: python tools/check_docs.py [files...]   (default: README.md docs/*.md)
+"""
+from __future__ import annotations
+
+import glob
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"(?<!!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.+?)\s*$", re.M)
+# `path`-style code mentions that should exist on disk (plain files only)
+CODE_PATH_RE = re.compile(
+    r"`((?:src|tests|benchmarks|examples|docs|tools)/[A-Za-z0-9_/.-]+"
+    r"\.(?:py|md|json|yml|npz))`")
+
+
+def slugify(heading: str) -> str:
+    """GitHub's anchor slug: strip markdown/punctuation, dash the spaces."""
+    h = re.sub(r"[`*_]", "", heading).strip().lower()
+    h = re.sub(r"[^\w\- ]", "", h)
+    return h.replace(" ", "-")
+
+
+def heading_slugs(path: str) -> set:
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    slugs, seen = set(), {}
+    for m in HEADING_RE.finditer(text):
+        s = slugify(m.group(1))
+        n = seen.get(s, 0)
+        seen[s] = n + 1
+        slugs.add(s if n == 0 else f"{s}-{n}")   # duplicate headings
+    return slugs
+
+
+def check_file(path: str) -> list:
+    errors = []
+    rel = os.path.relpath(path, ROOT)
+    with open(path, encoding="utf-8") as f:
+        text = f.read()
+    for m in LINK_RE.finditer(text):
+        target = m.group(1)
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        frag = None
+        if "#" in target:
+            target, frag = target.split("#", 1)
+        dest = path if not target else os.path.normpath(
+            os.path.join(os.path.dirname(path), target))
+        if target and not os.path.exists(dest):
+            errors.append(f"{rel}: broken link -> {m.group(1)}")
+            continue
+        if frag and dest.endswith(".md"):
+            if slugify(frag) not in heading_slugs(dest):
+                errors.append(f"{rel}: missing anchor -> {m.group(1)}")
+    for m in CODE_PATH_RE.finditer(text):
+        if not os.path.exists(os.path.join(ROOT, m.group(1))):
+            errors.append(f"{rel}: code path does not exist -> `{m.group(1)}`")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    files = argv or ([os.path.join(ROOT, "README.md")]
+                     + sorted(glob.glob(os.path.join(ROOT, "docs", "*.md"))))
+    errors = []
+    for path in files:
+        errors.extend(check_file(path))
+    if errors:
+        print(f"check_docs: {len(errors)} problem(s)")
+        for e in errors:
+            print(f"  FAIL {e}")
+        return 1
+    print(f"check_docs: {len(files)} files clean")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
