@@ -1,0 +1,182 @@
+"""Execution-plan layer — one dispatch seam for every DPA-shaped op.
+
+TransDot's hardware routes every Table-I mode through a *single
+reconfigurable datapath* selected by the mode register; FPnew gets the
+same effect from an operation-group hierarchy behind one dispatch
+interface.  This module is the software analogue of that seam: a
+declarative routing table keyed on
+
+    (op, policy mode bits, shape/alignment predicates, backend)
+
+whose entries are registered by the kernel modules themselves
+(`repro.kernels.registry`), each with an explicit lowering predicate and
+a reference fallback.  `resolve(op, policy, **ctx)` replaces every
+scattered ``if use_kernel and Sq > 1 and ...`` branch that used to live
+in `core.linear`, `models.layers`, `models.decode_attn`, and
+`launch.engine`: call sites ask the table which route serves their
+(policy, shapes) and run it — adding a kernel is one `register()` call,
+not a cross-cutting edit.
+
+Ops routed here:
+
+  matmul          x @ w under the DPA contract (`core.linear.dpa_dot`)
+  grouped_matmul  per-expert einsum matmuls (grouped linear / MoE)
+  flash_attn      full-sequence attention (`models.layers._sdpa`)
+  decode_attn     single-token decode over the contiguous quantized cache
+  paged_decode    single-token decode over the paged cache (block table)
+  quantize_pack   fused row quantization (+fp4 nibble pack)
+
+Every resolved plan is introspectable: `describe(op, policy, **ctx)`
+returns the op, the selected route, each candidate's predicate results,
+and a bytes-moved estimate, so serve/engine reports and `hlo_analysis`
+can state which kernel actually ran (`tools/plan_table.py` prints the
+whole table).  Resolution is deterministic: candidates are ordered by
+(priority desc, name), the first fully-eligible entry wins, and every op
+carries a reference fallback whose predicate only checks semantic
+viability — `resolve` never silently picks between equals.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Optional
+
+from .policy import get_policy
+
+
+class PlanError(ValueError):
+    """No registered route can serve (op, policy, shapes)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanEntry:
+    """One row of the routing table.
+
+    predicate(policy, ctx) returns a dict of named boolean predicate
+    results; the route is eligible iff all are True.  `run` is the route
+    implementation (signature is per-op, uniform across the op's
+    routes).  `reference` names the op's fallback route this entry is
+    pinned against, at `tol` max-abs error (0.0 = bit-identical;
+    `tests/test_exec_plan.py` enforces the pin for every route).
+    `tests` names the tier-1 tests exercising the route —
+    `tools/plan_table.py` fails CI when a registered route names none.
+    """
+    op: str
+    name: str
+    backend: str                       # "pallas" | "xla"
+    run: Callable
+    predicate: Callable                # (policy, ctx) -> {bit: bool}
+    priority: int = 0
+    reference: Optional[str] = None    # route name of the fallback
+    tol: float = 0.0                   # pinned max-abs error vs reference
+    bytes_moved: Optional[Callable] = None   # (policy, ctx) -> int
+    tests: tuple = ()
+    note: str = ""
+
+    def eligible(self, policy, ctx) -> bool:
+        return all(self.predicate(policy, ctx).values())
+
+    def describe(self, policy, ctx) -> dict:
+        bm = self.bytes_moved(policy, ctx) if self.bytes_moved else None
+        return {"op": self.op, "route": self.name, "backend": self.backend,
+                "predicates": self.predicate(policy, ctx),
+                "bytes_moved": bm, "reference": self.reference,
+                "tol": self.tol}
+
+
+_TABLE: dict[str, list[PlanEntry]] = {}
+_BACKENDS_LOADED = False
+
+
+def register(op: str, name: str, *, backend: str, run: Callable,
+             predicate: Callable = None, priority: int = 0,
+             reference: Optional[str] = None, tol: float = 0.0,
+             bytes_moved: Optional[Callable] = None, tests: tuple = (),
+             note: str = "") -> PlanEntry:
+    """Add one route to the table (kernel modules call this at import).
+
+    Duplicate (op, name) registrations are an error — the table is the
+    single source of truth and must stay deterministic."""
+    rows = _TABLE.setdefault(op, [])
+    if any(e.name == name for e in rows):
+        raise ValueError(f"route {op}/{name} registered twice")
+    entry = PlanEntry(op=op, name=name, backend=backend, run=run,
+                      predicate=predicate or (lambda policy, ctx: {}),
+                      priority=priority, reference=reference, tol=tol,
+                      bytes_moved=bytes_moved, tests=tuple(tests),
+                      note=note)
+    rows.append(entry)
+    rows.sort(key=lambda e: (-e.priority, e.name))
+    return entry
+
+
+def _ensure_backends() -> None:
+    """Import the kernel registry exactly once, on first resolution.
+
+    This one lazy import is the whole layer's deferred dependency — it
+    replaces the per-function `from repro.kernels import ops as kops`
+    imports the call sites used to carry to dodge import cycles."""
+    global _BACKENDS_LOADED
+    if not _BACKENDS_LOADED:
+        # flag flips only after a *successful* import: a failed registry
+        # import (broken dependency) must surface again on the next
+        # resolve, not decay into "unknown op" against an empty table.
+        # No recursion risk — nothing resolves during registration.
+        importlib.import_module("repro.kernels.registry")
+        _BACKENDS_LOADED = True
+
+
+def candidates(op: str) -> list:
+    """All registered routes for `op`, in resolution order."""
+    _ensure_backends()
+    if op not in _TABLE:
+        raise PlanError(f"unknown op {op!r}; registered: {sorted(_TABLE)}")
+    return list(_TABLE[op])
+
+
+def ops() -> list:
+    """All op names with registered routes."""
+    _ensure_backends()
+    return sorted(_TABLE)
+
+
+def route(op: str, name: str) -> PlanEntry:
+    """Fetch one route by name (tests/benchmarks pin specific routes)."""
+    for e in candidates(op):
+        if e.name == name:
+            return e
+    raise PlanError(f"no route {op}/{name}")
+
+
+def resolve(op: str, policy=None, **ctx) -> PlanEntry:
+    """-> the highest-priority eligible route for (op, policy, ctx).
+
+    `ctx` carries the static shape/alignment facts the predicates gate
+    on (all python ints/bools/strs, so resolution is trace-time-stable
+    under jit).  Raises `PlanError` — with every candidate's predicate
+    results — when nothing can serve the request."""
+    policy = get_policy(policy if policy is not None else "fp32")
+    for entry in candidates(op):
+        if entry.eligible(policy, ctx):
+            return entry
+    tried = {e.name: e.predicate(policy, ctx) for e in _TABLE[op]}
+    raise PlanError(f"no {op} route serves policy={policy} ctx={ctx}; "
+                    f"predicates: {tried}")
+
+
+def describe(op: str, policy=None, **ctx) -> dict:
+    """Introspect a resolution: selected route + every candidate's
+    predicate results + the selected route's bytes-moved estimate."""
+    policy = get_policy(policy if policy is not None else "fp32")
+    entry = resolve(op, policy, **ctx)
+    return dict(entry.describe(policy, ctx),
+                candidates={e.name: e.predicate(policy, ctx)
+                            for e in candidates(op)})
+
+
+def reference_entry(entry: PlanEntry) -> Optional[PlanEntry]:
+    """The fallback route `entry` is pinned against (None for the
+    reference itself)."""
+    if entry.reference is None:
+        return None
+    return route(entry.op, entry.reference)

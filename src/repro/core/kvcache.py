@@ -260,6 +260,34 @@ def write_prefill_rows(cache, rows, page_ids, length: int):
     return out
 
 
+def paged_from_contiguous(ref, lengths, *, page_size: int,
+                          n_pages: int = None):
+    """Relayout a contiguous quantized cache into a fresh paged one.
+
+    ref: contiguous pytree with leaves (B, S, KV, ...); lengths: host
+    ints, request b's live rows (its first `lengths[b]` positions of
+    `ref` scatter into freshly allocated pages).  Returns the paged
+    cache pytree with the block table installed.  Pure relayout — pages
+    hold codes/scales bit-identical to `ref` — which makes this the
+    standard paged-vs-contiguous fixture for tests and benchmarks."""
+    import numpy as np
+    B = ref["k_codes"].shape[0]
+    n_need = [max(1, -(-int(n) // page_size)) for n in lengths]
+    if n_pages is None:
+        n_pages = sum(n_need) + 2
+    alloc = PageAllocator(n_pages)
+    table = np.full((B, max(n_need)), SCRATCH_PAGE, np.int32)
+    cache = {key: jnp.zeros((n_pages, page_size) + ref[key].shape[2:],
+                            ref[key].dtype) for key in QUANT_KEYS}
+    for b, n in enumerate(lengths):
+        ids = alloc.alloc(n_need[b])
+        table[b, :len(ids)] = ids
+        rows = {key: ref[key][b] for key in QUANT_KEYS}
+        cache = write_prefill_rows(cache, rows, ids, int(n))
+    cache["block_table"] = jnp.asarray(table)
+    return cache
+
+
 def paged_kv_cache_nbytes(live_tokens: int, pages_in_use: int,
                           page_size: int, n_kv: int, hd: int, *, fmt,
                           packed: bool = False) -> dict:

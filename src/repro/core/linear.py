@@ -2,17 +2,13 @@
 
 Forward contract (the paper's Table I):  y = sum_k q(x)_k * q(w)_k + c
 with products in the operand format and accumulation in fp32 (or fp16).
-Three execution paths, selected by the policy:
-
-  fp32        : plain dot (DPA disabled / baseline).
-  fake-quant  : STE quant-dequant of both operands + fp32-accumulated dot.
-                This is the *training* path — numerics match the hardware
-                contract (operands carry format precision, accumulation is
-                wide) while gradients flow.
-  kernel      : Pallas `dpa_matmul` (serving / TPU path; interpret-mode on
-                CPU).  The policy's `packed` / `fused_quant` bits select
-                the packed-fp4 operand layout and the fused in-kernel
-                quantize prologue (see `repro.kernels.ops.dpa_matmul`).
+Which execution route serves a given call — plain f32 dot, STE
+fake-quant (training), native-narrow-weight dot (serving), or one of the
+Pallas kernel pipelines (packed / fused-quant) — is decided by the
+execution-plan layer: `dpa_dot` asks `core.exec_plan.resolve("matmul",
+policy, ...)` and runs the winning route.  The routes themselves and
+their lowering predicates live in `repro.kernels.registry`; this module
+keeps only the parameter plumbing and dtype guards.
 
 Parameters are plain pytrees ({"w": ..., "b": ...}); the module system in
 `repro.models` composes these functions.
@@ -24,8 +20,8 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from . import exec_plan
 from .policy import TransPrecisionPolicy, get_policy
-from .quantize import fake_quant
 
 
 def init_linear(key, d_in: int, d_out: int, *, bias: bool = False,
@@ -49,32 +45,19 @@ _NATIVE_NARROW = NATIVE_NARROW
 def dpa_dot(x, w, policy: TransPrecisionPolicy):
     """The DPA execution contract for x @ w (contraction on last/first)."""
     policy = get_policy(policy)
-    acc_t = jnp.float32 if policy.accum == "fp32" else jnp.float16
-    if str(w.dtype) in _NATIVE_NARROW:
-        # pre-quantized weights (serving): keep them NATIVE in the dot —
-        # fp8 x fp8 -> fp32 is the MXU DPA path itself, and it leaves no
-        # whole-stack weight convert for XLA to hoist out of the layer
-        # scan (measured 13.7 GiB on dbrx decode; EXPERIMENTS.md §Perf).
-        from .quantize import cast_to, compute_scale
-        sx = compute_scale(x, policy.fmt_acts, axis=-1)
-        xq = cast_to(x.astype(jnp.float32) / sx, policy.fmt_acts)
-        out = jnp.dot(xq, w, preferred_element_type=jnp.float32)
-        return out * sx
-    if not policy.enabled:
-        return jnp.dot(x, w, preferred_element_type=acc_t)
-    if policy.use_kernel:
-        from repro.kernels import ops as kops
-        return kops.dpa_matmul(x, w, policy)
-    # fake-quant path: operands at format precision, wide accumulation
-    wq = fake_quant(
-        w, policy.fmt_weights,
-        axis=0 if policy.w_granularity == "per_channel" else None,
-        block=policy.block_size if policy.w_granularity == "per_block" else None)
-    xq = fake_quant(
-        x, policy.fmt_acts,
-        axis=-1 if policy.a_granularity == "per_channel" else None,
-        block=policy.block_size if policy.a_granularity == "per_block" else None)
-    return jnp.dot(xq, wq, preferred_element_type=acc_t)
+    entry = exec_plan.resolve("matmul", policy, w_dtype=str(w.dtype),
+                              m=int(jnp.size(x) // x.shape[-1]),
+                              k=x.shape[-1], n=w.shape[-1])
+    return entry.run(x, w, policy)
+
+
+def dpa_grouped_dot(x, w, policy: TransPrecisionPolicy, *, eq: str):
+    """The grouped (per-expert) DPA contract: einsum `eq` over x and the
+    stacked expert weights w, routed through the plan layer."""
+    policy = get_policy(policy)
+    entry = exec_plan.resolve("grouped_matmul", policy,
+                              w_dtype=str(w.dtype), eq=eq)
+    return entry.run(x, w, policy, eq=eq)
 
 
 def apply_linear(params, x, policy: TransPrecisionPolicy = None):
@@ -111,20 +94,4 @@ def init_grouped_linear(key, n_groups: int, d_in: int, d_out: int, *,
 def apply_grouped_linear(params, x, policy: TransPrecisionPolicy = None):
     """x: (n_groups, tokens, d_in) -> (n_groups, tokens, d_out)."""
     policy = get_policy(policy or "fp32")
-    w = params["w"]
-    acc_t = jnp.float32 if policy.accum == "fp32" else jnp.float16
-    if str(w.dtype) in _NATIVE_NARROW:
-        from .quantize import cast_to, compute_scale
-        sx = compute_scale(x, policy.fmt_acts, axis=-1)
-        xq = cast_to(x.astype(jnp.float32) / sx, policy.fmt_acts)
-        y = jnp.einsum("gti,gio->gto", xq, w,
-                       preferred_element_type=jnp.float32) * sx
-        return y.astype(x.dtype)
-    w = w.astype(x.dtype)
-    if policy.enabled:
-        w = fake_quant(w, policy.fmt_weights,
-                       axis=1 if policy.w_granularity == "per_channel" else None)
-        x = fake_quant(x, policy.fmt_acts)
-    y = jnp.einsum("gti,gio->gto", x, w,
-                   preferred_element_type=acc_t)
-    return y.astype(x.dtype)
+    return dpa_grouped_dot(x, params["w"], policy, eq="gti,gio->gto")

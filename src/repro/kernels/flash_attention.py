@@ -26,14 +26,17 @@ Supports causal and sliding-window (RecurrentGemma local attention)
 masks.  Forward only: training configs use XLA attention + remat; the
 kernel serves prefill.
 
-Paged KV caches (the continuous-batching engine's layout) are served by
-the jnp gather fallback — `core.kvcache.gather_paged_kv` re-materializes
-a request's pages into exactly the contiguous codes+scales layout the
-cache-mode prologue above consumes, then `models.decode_attn.
-dpa_paged_decode_attn` applies the same dequant contract.  A Pallas
-block-table prologue (BlockSpec index_map through the table, so the
-gather never round-trips HBM) is the natural TPU follow-up and slots in
-behind the same entry point.
+  paged_decode_attention : the serving engine's decode step over the
+      *paged* quantized KV cache (`core.kvcache` page pool + block
+      table).  The block table rides scalar prefetch and the K/V
+      BlockSpec index maps read *through* it — page j of request b
+      streams straight from pool page ``table[b, j]`` into VMEM with
+      prologue dequant, so the contiguous view is never re-materialized
+      in HBM (`gather_paged_kv` stays as the jnp reference fallback).
+      Bit-identical to that fallback across all Table-I KV formats,
+      packed fp4 crossing page boundaries included; selected by
+      `core.exec_plan` (route ``paged_decode/pallas_block_table``) like
+      every other route.
 """
 from __future__ import annotations
 
@@ -270,3 +273,115 @@ def dpa_flash_attention(q, k, v, k_scale=None, v_scale=None, *, fmt: str,
         interpret=interpret,
     )(*operands)
     return out.reshape(B, H, Sq, D)
+
+
+# -----------------------------------------------------------------------------
+# paged decode: block-table reads through scalar-prefetched index maps
+# -----------------------------------------------------------------------------
+
+def _paged_decode_kernel(tab_ref, pos_ref, q_ref, kc_ref, ks_ref, vc_ref,
+                         vs_ref, o_ref, k_s, v_s, *, n_pages: int, ps: int,
+                         kv_heads: int, fmt: str, fmt_kv: str,
+                         kv_packed: bool, scale: float, s_view: int):
+    """Grid (B * KV, n_pages): page steps stream request b's timeline —
+    pool page ``table[b, j]`` arrives via the BlockSpec index map — and
+    widen codes * scales into VMEM scratch; the last step runs the whole
+    DPA attention row.
+
+    The final computation deliberately mirrors `models.decode_attn.
+    dpa_attention`'s einsum structure (batch dims (head, s=1), per-batch
+    (1, hd) x (hd, S) matvecs) instead of a flat (g, hd) @ (hd, S) dot:
+    XLA tiles the two shapes differently, and the einsum form keeps the
+    route bit-identical to the jnp gather fallback — the contract
+    `tests/test_exec_plan.py` pins at tol 0.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    b = i // kv_heads
+    k_s[pl.ds(j * ps, ps), :] = _widen_kv(kc_ref[0, :, 0, :], fmt_kv,
+                                          kv_packed) * ks_ref[0, :, 0, :]
+    v_s[pl.ds(j * ps, ps), :] = _widen_kv(vc_ref[0, :, 0, :], fmt_kv,
+                                          kv_packed) * vs_ref[0, :, 0, :]
+
+    @pl.when(j == n_pages - 1)
+    def _compute():
+        g, hd = q_ref.shape[1], q_ref.shape[2]
+        qg, qs = quant_rows_grid(q_ref[0][:, None, None, :], fmt)
+        k_all = jnp.broadcast_to(k_s[...][None, :, None, :],
+                                 (g, s_view, 1, hd))
+        v_all = jnp.broadcast_to(v_s[...][None, :, None, :],
+                                 (g, s_view, 1, hd))
+        logits = jnp.einsum("bshd,bthd->bhst", qg, k_all,
+                            preferred_element_type=jnp.float32)
+        logits = logits * qs.transpose(0, 2, 1, 3) * scale
+        kpos = jax.lax.broadcasted_iota(jnp.int32, logits.shape, 3)
+        logits = jnp.where(kpos <= pos_ref[b], logits, _NEG_INF)
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        p = jnp.exp(logits - m)                       # f32 softmax core
+        pg, psq = quant_rows_grid(p, fmt)
+        den = jnp.sum(pg, axis=-1, keepdims=True) * psq
+        num = jnp.einsum("bhst,bthd->bshd", pg, v_all,
+                         preferred_element_type=jnp.float32)
+        num = num * psq.transpose(0, 2, 1, 3)
+        out = num / jnp.maximum(den, 1e-30).transpose(0, 2, 1, 3)
+        o_ref[0] = out[:, 0, 0, :].astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "fmt_kv", "kv_packed",
+                                             "scale", "interpret"))
+def paged_decode_attention(q, k_codes, k_scale, v_codes, v_scale,
+                           block_table, positions, *, fmt: str, fmt_kv: str,
+                           kv_packed: bool = False, scale=None,
+                           interpret: bool = True):
+    """One decode step against the paged quantized KV cache.
+
+    q: (B, 1, H, hd) (already rope'd at per-request positions);
+    k/v_codes: (P, page, KV, wc) page pools (wc = hd, or hd // 2 packed
+    fp4); k/v_scale: (P, page, KV, 1) f32 per-row scales; block_table:
+    (B, max_pages) i32; positions: (B,) i32 current token index per
+    request.  Same DPA contract as `dpa_flash_attention`'s cache mode —
+    prologue dequant, f32 accumulation, f32 softmax glue — with the
+    causal mask per request (row b attends key slots <= positions[b];
+    scratch/stale tail pages are masked off).
+    """
+    B, Sq, H, hd = q.shape
+    assert Sq == 1, "paged decode serves single-token steps"
+    _, n_pages = block_table.shape
+    _, ps, kv_heads, _ = k_codes.shape
+    g = H // kv_heads
+    s_view = n_pages * ps
+    scale_v = float(scale if scale is not None else hd ** -0.5)
+    qr = q[:, 0].reshape(B * kv_heads, g, hd)
+
+    def page_idx(i, j, tab, pos, kv=kv_heads):
+        return (tab[i // kv, j], 0, i % kv, 0)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, n_pages=n_pages, ps=ps, kv_heads=kv_heads,
+        fmt=fmt, fmt_kv=fmt_kv, kv_packed=kv_packed, scale=scale_v,
+        s_view=s_view)
+    wc = k_codes.shape[-1]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B * kv_heads, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, g, hd), lambda i, j, tab, pos: (i, 0, 0)),
+            pl.BlockSpec((1, ps, 1, wc), page_idx),
+            pl.BlockSpec((1, ps, 1, 1), page_idx),
+            pl.BlockSpec((1, ps, 1, wc), page_idx),
+            pl.BlockSpec((1, ps, 1, 1), page_idx),
+        ],
+        out_specs=pl.BlockSpec((1, g, hd), lambda i, j, tab, pos: (i, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((s_view, hd), jnp.float32),
+                        pltpu.VMEM((s_view, hd), jnp.float32)],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B * kv_heads, g, hd), q.dtype),
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(jnp.asarray(block_table, jnp.int32), jnp.asarray(positions, jnp.int32),
+      qr, k_codes, k_scale, v_codes, v_scale)
+    return out.reshape(B, 1, H, hd)

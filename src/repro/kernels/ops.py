@@ -1,9 +1,15 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-These are what the framework calls: they quantize per the policy, pad to
-block multiples, dispatch the kernel, and undo padding.  On CPU they run
-in interpret mode (`REPRO_PALLAS_INTERPRET=0` to force compiled mode on
-real TPUs).
+These are what the execution-plan layer dispatches to: they quantize per
+the policy, pad to block multiples, dispatch the kernel, and undo
+padding.  On CPU they run in interpret mode (`REPRO_PALLAS_INTERPRET=0`
+to force compiled mode on real TPUs).
+
+Route selection does NOT live here: `repro.kernels.registry` registers
+each pipeline below as a `core.exec_plan` route with an explicit
+lowering predicate, and the policy-driven entry points (`dpa_matmul`,
+`quantize_rows`) resolve through the plan so they stay semantically
+identical to the call sites that use the plan directly.
 """
 from __future__ import annotations
 
@@ -11,6 +17,7 @@ import os
 
 import jax.numpy as jnp
 
+from repro.core import exec_plan
 from repro.core.packing import pack_fp4_axis
 from repro.core.policy import TransPrecisionPolicy, get_policy
 from repro.core.quantize import compute_scale, cast_to
@@ -44,55 +51,33 @@ def _quant_operand(x, fmt: str, axis_scale):
     return cast_to(x.astype(jnp.float32) / scale, fmt), scale
 
 
-def dpa_matmul(x, w, policy: TransPrecisionPolicy, *, bm=128, bk=128, bn=128):
-    """Policy-driven trans-precision matmul: x (..., K) @ w (K, N).
-
-    Three kernel pipelines, selected by the policy's mode bits:
-
-      default            : XLA quantize pass on both sides, prequant kernel.
-      policy.packed      : fp4 operand sides additionally packed 2 codes/
-                           byte before dispatch — the BlockSpec moves half
-                           the bytes; bit-identical results.
-      policy.fused_quant : activations enter the kernel raw; quantization
-                           happens in the kernel prologue with per-(row,
-                           K-block) scales (weights stay pre-quantized /
-                           packed — the serving layout).
-    """
-    policy = get_policy(policy)
-    lead = x.shape[:-1]
-    K = x.shape[-1]
-    N = w.shape[-1]
-    x2 = x.reshape(-1, K)
-    bm_ = min(bm, max(8, x2.shape[0]))
+def _prep_weights(w, policy, bk, bn):
+    """Quantize + pad + (optionally) pack the weight side."""
     pack_w = policy.packed and policy.fmt_weights == "fp4_e2m1"
-    pack_x = (policy.packed and not policy.fused_quant
-              and policy.fmt_acts == "fp4_e2m1")
-
     wq, sw = _quant_operand(w, policy.fmt_weights, axis_scale=0)
     wq, _ = _pad_to(wq, bk, 0)
     wq, pn = _pad_to(wq, bn, 1)
     swp, _ = _pad_to(sw, bn, 1)
     if pack_w:
         wq = pack_fp4_axis(wq, 0)
+    return wq, swp, pn, pack_w
 
-    if policy.fused_quant:
-        # x ships at its native width (f32/bf16); the kernel widens in VMEM
-        x2p, pm = _pad_to(x2, bm_, 0)
-        x2p, _ = _pad_to(x2p, bk, 1)
-        out = _dm.dpa_matmul_fused(
-            x2p, wq, swp, fmt_x=policy.fmt_acts, fmt_w=policy.fmt_weights,
-            bm=bm_, bk=bk, bn=bn, pack_w=pack_w, interpret=INTERPRET)
-    else:
-        xq, sx = _quant_operand(x2, policy.fmt_acts, axis_scale=-1)
-        xq, pm = _pad_to(xq, bm_, 0)
-        sxp, _ = _pad_to(sx, bm_, 0)
-        xq, _ = _pad_to(xq, bk, 1)
-        if pack_x:
-            xq = pack_fp4_axis(xq, 1)
-        out = _dm.dpa_matmul_prequant(
-            xq, wq, sxp, swp, fmt_x=policy.fmt_acts,
-            fmt_w=policy.fmt_weights, bm=bm_, bk=bk, bn=bn,
-            pack_x=pack_x, pack_w=pack_w, interpret=INTERPRET)
+
+def dpa_matmul_fused_pipeline(x, w, policy: TransPrecisionPolicy, *,
+                              bm=128, bk=128, bn=128):
+    """Fused-quant pipeline: x ships at its native width (f32/bf16) and
+    quantizes in the kernel prologue with per-(row, K-block) scales;
+    weights are pre-quantized (packed fp4 when the policy says)."""
+    policy = get_policy(policy)
+    lead, K, N = x.shape[:-1], x.shape[-1], w.shape[-1]
+    x2 = x.reshape(-1, K)
+    bm_ = min(bm, max(8, x2.shape[0]))
+    wq, swp, pn, pack_w = _prep_weights(w, policy, bk, bn)
+    x2p, pm = _pad_to(x2, bm_, 0)
+    x2p, _ = _pad_to(x2p, bk, 1)
+    out = _dm.dpa_matmul_fused(
+        x2p, wq, swp, fmt_x=policy.fmt_acts, fmt_w=policy.fmt_weights,
+        bm=bm_, bk=bk, bn=bn, pack_w=pack_w, interpret=INTERPRET)
     if pm:
         out = out[: x2.shape[0]]
     if pn:
@@ -100,10 +85,59 @@ def dpa_matmul(x, w, policy: TransPrecisionPolicy, *, bm=128, bk=128, bn=128):
     return out.reshape(*lead, N).astype(x.dtype)
 
 
+def dpa_matmul_prequant_pipeline(x, w, policy: TransPrecisionPolicy, *,
+                                 bm=128, bk=128, bn=128):
+    """Prequant pipeline: XLA quantize pass on both sides, prequant
+    kernel; fp4 operand sides additionally packed 2 codes/byte before
+    dispatch when the policy says — the BlockSpec moves half the bytes,
+    bit-identical results."""
+    policy = get_policy(policy)
+    lead, K, N = x.shape[:-1], x.shape[-1], w.shape[-1]
+    x2 = x.reshape(-1, K)
+    bm_ = min(bm, max(8, x2.shape[0]))
+    pack_x = policy.packed and policy.fmt_acts == "fp4_e2m1"
+    wq, swp, pn, pack_w = _prep_weights(w, policy, bk, bn)
+    xq, sx = _quant_operand(x2, policy.fmt_acts, axis_scale=-1)
+    xq, pm = _pad_to(xq, bm_, 0)
+    sxp, _ = _pad_to(sx, bm_, 0)
+    xq, _ = _pad_to(xq, bk, 1)
+    if pack_x:
+        xq = pack_fp4_axis(xq, 1)
+    out = _dm.dpa_matmul_prequant(
+        xq, wq, sxp, swp, fmt_x=policy.fmt_acts,
+        fmt_w=policy.fmt_weights, bm=bm_, bk=bk, bn=bn,
+        pack_x=pack_x, pack_w=pack_w, interpret=INTERPRET)
+    if pm:
+        out = out[: x2.shape[0]]
+    if pn:
+        out = out[:, :N]
+    return out.reshape(*lead, N).astype(x.dtype)
+
+
+def dpa_matmul(x, w, policy: TransPrecisionPolicy, *, bm=128, bk=128,
+               bn=128):
+    """Policy-driven trans-precision matmul: x (..., K) @ w (K, N).
+
+    Resolves the kernel pipeline through `core.exec_plan` (routes
+    ``matmul/pallas_fused`` and ``matmul/pallas_prequant``), so calling
+    this directly is identical to routing via `core.linear.dpa_dot`."""
+    policy = get_policy(policy)
+    entry = exec_plan.resolve("matmul", policy, w_dtype=str(w.dtype),
+                              kernel_only=True)
+    return entry.run(x, w, policy, bm=bm, bk=bk, bn=bn)
+
+
 def quantize_rows(x, fmt: str, *, bm=128, pack: bool = False):
     """Fused absmax+cast row quantization (2D input).  With `pack` (fp4
     only) the kernel also nibble-packs: (M, K//2) uint8 out — the
-    quantize->pack half of the quantize->pack->DPA pipeline."""
+    quantize->pack half of the quantize->pack->DPA pipeline.  Resolved
+    through `core.exec_plan` op ``quantize_pack``."""
+    entry = exec_plan.resolve("quantize_pack", None, fmt=fmt, pack=pack)
+    return entry.run(x, fmt=fmt, pack=pack, bm=bm)
+
+
+def quantize_rows_pallas(x, *, fmt: str, pack: bool, bm=128):
+    """The Pallas row-quantizer pipelines (`quantize_pack` routes)."""
     x2, pm = _pad_to(x, bm, 0)
     if pack:
         assert fmt == "fp4_e2m1", "pack=True is the fp4 pipeline"
@@ -134,3 +168,15 @@ def dpa_flash_attention(q, k, v, *, fmt, fmt_kv=None, causal=True,
                                    causal=causal, window=window,
                                    scale=scale, bq=bq, bk=bk,
                                    interpret=INTERPRET)
+
+
+def paged_decode_attention(q, cache, positions, *, fmt, fmt_kv,
+                           kv_packed=False, scale=None):
+    """Block-table paged decode (route ``paged_decode/pallas_block_table``):
+    unpacks the paged-cache pytree and dispatches the Pallas kernel —
+    pages stream HBM->VMEM through the block table, no gathered view."""
+    return _fa.paged_decode_attention(
+        q, cache["k_codes"], cache["k_scale"], cache["v_codes"],
+        cache["v_scale"], cache["block_table"], positions, fmt=fmt,
+        fmt_kv=fmt_kv, kv_packed=kv_packed, scale=scale,
+        interpret=INTERPRET)

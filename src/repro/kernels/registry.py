@@ -1,0 +1,388 @@
+"""The DPA routing table: every `core.exec_plan` route, in one place.
+
+This module is imported lazily by `core.exec_plan` on first resolution
+and registers one `PlanEntry` per (op, route): the Pallas kernel
+pipelines from `kernels.ops` and the XLA/jnp reference fallbacks each
+kernel is pinned against.  All policy-mode interpretation that used to
+be scattered across `core.linear`, `models.layers`,
+`models.decode_attn`, and `launch.engine` lives in the predicates here —
+the FPnew-style operation-group hierarchy, as a table.
+
+Route conventions:
+
+  - predicates return *named* boolean bits (`describe()` shows them), so
+    a failed resolution states exactly which gate excluded each route;
+  - every op's lowest-priority route is a reference fallback whose
+    predicate checks only semantic viability (it can always serve what
+    the op means);
+  - `reference`/`tol` pin each route against its fallback —
+    `tests/test_exec_plan.py` enumerates the table and enforces the pin;
+  - `tests` names the tier-1 tests exercising the route;
+    `tools/plan_table.py` fails CI when a route names none.
+
+Uniform run signatures per op:
+
+  matmul          run(x, w, policy, **block_kw) -> (..., N)
+  grouped_matmul  run(x, w, policy, *, eq) -> einsum output, x.dtype
+  flash_attn      run(q, k, v, *, policy, causal, window, offset, valid,
+                      scale, kv_on_grid) -> (B, Sq, H, hd)
+  decode_attn     run(q, cache, offset, *, policy, scale) -> (B,1,H,hd)
+  paged_decode    run(q, cache, positions, *, policy, scale) -> (B,1,H,hd)
+  quantize_pack   run(x, *, fmt, pack, bm) -> (codes, scales)
+"""
+from __future__ import annotations
+
+import os
+
+import jax.numpy as jnp
+
+from repro.core import exec_plan
+from repro.core.linear import NATIVE_NARROW
+from repro.core.packing import operand_nbytes, pack_fp4_axis
+from repro.core.quantize import cast_to, compute_scale, fake_quant
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+from repro.models import decode_attn as D
+
+
+def _acc_t(policy):
+    return jnp.float32 if policy.accum == "fp32" else jnp.float16
+
+
+def _kv_fmt(policy):
+    """fmt_kv the attention routes consume (None = quantize onto the
+    attention grid, the raw-KV contract)."""
+    return policy.fmt_kv if policy.kv_quantized else None
+
+
+# -----------------------------------------------------------------------------
+# matmul: x @ w under the DPA contract (core.linear.dpa_dot)
+# -----------------------------------------------------------------------------
+
+def _mm_native(x, w, policy, **_):
+    # pre-quantized weights (serving): keep them NATIVE in the dot —
+    # fp8 x fp8 -> fp32 is the MXU DPA path itself, and it leaves no
+    # whole-stack weight convert for XLA to hoist out of the layer scan
+    # (measured 13.7 GiB on dbrx decode; EXPERIMENTS.md §Perf).
+    sx = compute_scale(x, policy.fmt_acts, axis=-1)
+    xq = cast_to(x.astype(jnp.float32) / sx, policy.fmt_acts)
+    out = jnp.dot(xq, w, preferred_element_type=jnp.float32)
+    return out * sx
+
+
+def _mm_fake_quant(x, w, policy, **_):
+    wq = fake_quant(
+        w, policy.fmt_weights,
+        axis=0 if policy.w_granularity == "per_channel" else None,
+        block=policy.block_size if policy.w_granularity == "per_block"
+        else None)
+    xq = fake_quant(
+        x, policy.fmt_acts,
+        axis=-1 if policy.a_granularity == "per_channel" else None,
+        block=policy.block_size if policy.a_granularity == "per_block"
+        else None)
+    return jnp.dot(xq, wq, preferred_element_type=_acc_t(policy))
+
+
+def _mm_f32(x, w, policy, **_):
+    return jnp.dot(x, w, preferred_element_type=_acc_t(policy))
+
+
+def _mm_operand_bytes(policy, ctx):
+    m, k, n = ctx.get("m"), ctx.get("k"), ctx.get("n")
+    if not (m and k and n):
+        return None
+    return (operand_nbytes(m * k, policy.fmt_acts, packed=policy.packed)
+            + operand_nbytes(k * n, policy.fmt_weights, packed=policy.packed))
+
+
+exec_plan.register(
+    "matmul", "xla_native_narrow", backend="xla", run=_mm_native,
+    priority=40, reference="xla_fake_quant", tol=0.35,
+    predicate=lambda policy, ctx: {
+        "native_narrow_weights": ctx.get("w_dtype") in NATIVE_NARROW,
+        "full_policy_path": not ctx.get("kernel_only", False)},
+    tests=("tests/test_perf_features.py::test_native_fp8_weight_dot",),
+    note="serving: weights stay in their narrow dtype end to end")
+
+exec_plan.register(
+    "matmul", "pallas_fused", backend="pallas",
+    run=kops.dpa_matmul_fused_pipeline,
+    priority=30, reference="xla_fake_quant", tol=0.35,
+    predicate=lambda policy, ctx: {
+        "kernel_path": policy.use_kernel or ctx.get("kernel_only", False),
+        "fused_quant": policy.fused_quant,
+        "float_weights": ctx.get("w_dtype") not in NATIVE_NARROW,
+        "dpa_enabled": policy.enabled},
+    bytes_moved=_mm_operand_bytes,
+    tests=("tests/test_kernels.py::test_fused_quantize_matmul_vs_ref",
+           "tests/test_kernels.py::test_packed_fused_policy_wrapper"),
+    note="in-kernel activation quantize, per-(row, K-block) scales")
+
+exec_plan.register(
+    "matmul", "pallas_prequant", backend="pallas",
+    run=kops.dpa_matmul_prequant_pipeline,
+    priority=25, reference="xla_fake_quant", tol=0.35,
+    predicate=lambda policy, ctx: {
+        "kernel_path": policy.use_kernel or ctx.get("kernel_only", False),
+        "prequant": not policy.fused_quant,
+        "float_weights": ctx.get("w_dtype") not in NATIVE_NARROW,
+        "dpa_enabled": policy.enabled},
+    bytes_moved=_mm_operand_bytes,
+    tests=("tests/test_kernels.py::test_dpa_matmul_vs_ref",
+           "tests/test_kernels.py::test_dpa_matmul_policy_wrapper_padding"),
+    note="XLA quantize pass, packed fp4 operand bytes when policy.packed")
+
+exec_plan.register(
+    "matmul", "xla_fake_quant", backend="xla", run=_mm_fake_quant,
+    priority=10,
+    predicate=lambda policy, ctx: {
+        "dpa_enabled": policy.enabled,
+        "full_policy_path": not ctx.get("kernel_only", False)},
+    tests=("tests/test_dpa_property.py", "tests/test_layers.py"),
+    note="training path: STE quant-dequant operands, wide accumulation")
+
+exec_plan.register(
+    "matmul", "xla_f32", backend="xla", run=_mm_f32, priority=0,
+    predicate=lambda policy, ctx: {
+        "full_policy_path": not ctx.get("kernel_only", False)},
+    tests=("tests/test_layers.py", "tests/test_archs.py"),
+    note="DPA disabled: the seed f32 datapath")
+
+
+# -----------------------------------------------------------------------------
+# grouped_matmul: per-expert einsums (grouped linear / MoE)
+# -----------------------------------------------------------------------------
+
+def _gmm_native(x, w, policy, *, eq):
+    sx = compute_scale(x, policy.fmt_acts, axis=-1)
+    xq = cast_to(x.astype(jnp.float32) / sx, policy.fmt_acts)
+    y = jnp.einsum(eq, xq, w, preferred_element_type=jnp.float32) * sx
+    return y.astype(x.dtype)
+
+
+def _gmm_fake_quant(x, w, policy, *, eq):
+    w = w.astype(x.dtype)
+    w = fake_quant(w, policy.fmt_weights,
+                   axis=1 if policy.w_granularity == "per_channel" else None)
+    x = fake_quant(x, policy.fmt_acts)
+    return jnp.einsum(eq, x, w,
+                      preferred_element_type=_acc_t(policy)).astype(x.dtype)
+
+
+def _gmm_f32(x, w, policy, *, eq):
+    return jnp.einsum(eq, x, w.astype(x.dtype),
+                      preferred_element_type=_acc_t(policy)).astype(x.dtype)
+
+
+exec_plan.register(
+    "grouped_matmul", "xla_native_narrow", backend="xla", run=_gmm_native,
+    priority=40, reference="xla_fake_quant", tol=0.35,
+    predicate=lambda policy, ctx: {
+        "native_narrow_weights": ctx.get("w_dtype") in NATIVE_NARROW},
+    tests=("tests/test_exec_plan.py::test_route_pinned_to_reference",),
+    note="pre-quantized expert weights stay native in the einsum")
+
+exec_plan.register(
+    "grouped_matmul", "xla_fake_quant", backend="xla", run=_gmm_fake_quant,
+    priority=10,
+    predicate=lambda policy, ctx: {"dpa_enabled": policy.enabled},
+    tests=("tests/test_layers.py::test_moe_capacity_drop_and_combine_weights",),
+    note="per-expert STE quant-dequant, wide accumulation")
+
+exec_plan.register(
+    "grouped_matmul", "xla_f32", backend="xla", run=_gmm_f32, priority=0,
+    tests=("tests/test_layers.py::test_moe_uniform_router_is_lossless_at_high_capacity",),
+    note="DPA disabled: plain grouped einsum")
+
+
+# -----------------------------------------------------------------------------
+# flash_attn: full-sequence attention (models.layers._sdpa)
+# -----------------------------------------------------------------------------
+
+def _fa_pallas_dpa(q, k, v, *, policy, causal, window, offset, valid,
+                   scale, kv_on_grid):
+    out = kops.dpa_flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), fmt=policy.fmt_attn, fmt_kv=_kv_fmt(policy),
+        causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _fa_pallas_f32(q, k, v, *, policy, causal, window, offset, valid,
+                   scale, kv_on_grid):
+    out = kops.flash_attention(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=causal, window=window)
+    return out.transpose(0, 2, 1, 3)
+
+
+def _fa_xla_dpa(q, k, v, *, policy, causal, window, offset, valid,
+                scale, kv_on_grid):
+    mask = D.build_sdpa_mask(q.shape[1], k.shape[1], offset, causal,
+                             window, valid)
+    return D.dpa_attention(q, k, v, mask[None, None], fmt=policy.fmt_attn,
+                           fmt_kv=_kv_fmt(policy), scale=scale,
+                           kv_on_grid=kv_on_grid)
+
+
+def _fa_xla_ref(q, k, v, *, policy, causal, window, offset, valid,
+                scale, kv_on_grid):
+    mask = D.build_sdpa_mask(q.shape[1], k.shape[1], offset, causal,
+                             window, valid)
+    return D.sdpa_reference(q, k, v, mask[None, None], scale=scale)
+
+
+def _fa_common_bits(policy, ctx):
+    return {"flash_enabled": ctx.get("use_flash", False),
+            "is_prefill": ctx.get("sq", 1) > 1,
+            "no_valid_mask": not ctx.get("has_valid", False)}
+
+
+exec_plan.register(
+    "flash_attn", "pallas_dpa_flash", backend="pallas", run=_fa_pallas_dpa,
+    priority=30, reference="xla_dpa_attn", tol=0.075,
+    predicate=lambda policy, ctx: dict(
+        _fa_common_bits(policy, ctx),
+        dpa_attn=policy.attn_enabled,
+        raw_kv=not ctx.get("kv_on_grid", False)),
+    tests=("tests/test_attention_dpa.py::test_dpa_flash_attention_vs_spec",
+           "tests/test_exec_plan.py::test_route_pinned_to_reference"),
+    note="online-softmax tiling; tol vs the global-softmax jnp fallback "
+         "is the blocked-p-quantization budget test_attention_dpa pins")
+
+exec_plan.register(
+    "flash_attn", "pallas_f32_flash", backend="pallas", run=_fa_pallas_f32,
+    priority=20, reference="xla_ref_attn", tol=2e-6,
+    predicate=lambda policy, ctx: dict(
+        _fa_common_bits(policy, ctx), f32_attn=not policy.attn_enabled),
+    tests=("tests/test_kernels.py::test_flash_attention_vs_ref",),
+    note="the seed f32 flash kernel")
+
+exec_plan.register(
+    "flash_attn", "xla_dpa_attn", backend="xla", run=_fa_xla_dpa,
+    priority=10,
+    predicate=lambda policy, ctx: {"dpa_attn": policy.attn_enabled},
+    tests=("tests/test_attention_dpa.py::test_jnp_fallback_matches_single_block_spec",),
+    note="any-shape jnp DPA attention (global softmax max)")
+
+exec_plan.register(
+    "flash_attn", "xla_ref_attn", backend="xla", run=_fa_xla_ref, priority=0,
+    tests=("tests/test_layers.py", "tests/test_archs.py"),
+    note="reference einsum + f32 softmax (the seed datapath)")
+
+
+# -----------------------------------------------------------------------------
+# decode_attn: single-token decode over the contiguous quantized cache
+# -----------------------------------------------------------------------------
+
+def _da_xla(q, cache, offset, *, policy, scale):
+    return D.dpa_decode_attn(q, cache, offset, fmt=policy.fmt_attn,
+                             fmt_kv=policy.fmt_kv,
+                             kv_packed=policy.kv_packed, scale=scale)
+
+
+def _kv_rows_bytes(policy, n_rows, hd):
+    """codes + f32 scales for K AND V over n_rows cache rows."""
+    return 2 * (operand_nbytes(n_rows * hd, policy.fmt_kv,
+                               packed=policy.kv_packed) + 4 * n_rows)
+
+
+exec_plan.register(
+    "decode_attn", "xla_dpa_decode", backend="xla", run=_da_xla, priority=0,
+    predicate=lambda policy, ctx: {"kv_quantized": policy.kv_quantized},
+    bytes_moved=lambda policy, ctx: _kv_rows_bytes(
+        policy, ctx.get("batch", 1) * ctx.get("s_ctx", 0)
+        * ctx.get("kv_heads", 1), ctx.get("hd", 0)),
+    tests=("tests/test_attention_dpa.py::"
+           "test_model_prefill_matches_stepped_decode",),
+    note="prologue-dequant decode off the contiguous codes+scales cache")
+
+
+# -----------------------------------------------------------------------------
+# paged_decode: single-token decode over the paged cache (block table)
+# -----------------------------------------------------------------------------
+
+def _pd_pallas(q, cache, positions, *, policy, scale):
+    return kops.paged_decode_attention(q, cache, positions,
+                                       fmt=policy.fmt_attn,
+                                       fmt_kv=policy.fmt_kv,
+                                       kv_packed=policy.kv_packed,
+                                       scale=scale)
+
+
+def _pd_gather(q, cache, positions, *, policy, scale):
+    return D.dpa_paged_decode_attn(q, cache, positions, fmt=policy.fmt_attn,
+                                   fmt_kv=policy.fmt_kv,
+                                   kv_packed=policy.kv_packed, scale=scale)
+
+
+def _pd_view_rows(ctx):
+    """Cache rows one batched decode step streams: every slot's full
+    block-table window (B x max_pages x page rows, per KV head)."""
+    return (ctx.get("batch", 1) * ctx.get("max_pages", 0)
+            * ctx.get("page_size", 0) * ctx.get("kv_heads", 1))
+
+
+exec_plan.register(
+    "paged_decode", "pallas_block_table", backend="pallas", run=_pd_pallas,
+    priority=10, reference="jnp_gather", tol=0.0,
+    predicate=lambda policy, ctx: {
+        "kv_quantized": policy.kv_quantized,
+        "not_disabled": os.environ.get("REPRO_PAGED_KERNEL", "1") != "0"},
+    bytes_moved=lambda policy, ctx: _kv_rows_bytes(
+        policy, _pd_view_rows(ctx), ctx.get("hd", 0)),
+    tests=("tests/test_exec_plan.py::test_paged_decode_kernel_bit_identical",
+           "tests/test_engine.py::test_engine_matches_static_batch_"
+           "per_request"),
+    note="BlockSpec index maps read pages through the scalar-prefetched "
+         "block table; codes+scales stream HBM->VMEM exactly once")
+
+exec_plan.register(
+    "paged_decode", "jnp_gather", backend="xla", run=_pd_gather, priority=0,
+    predicate=lambda policy, ctx: {"kv_quantized": policy.kv_quantized},
+    bytes_moved=lambda policy, ctx: 3 * _kv_rows_bytes(
+        policy, _pd_view_rows(ctx), ctx.get("hd", 0)),
+    tests=("tests/test_paged_kv.py::test_paged_decode_attn_matches_"
+           "contiguous",),
+    note="gather_paged_kv re-materializes the contiguous view in HBM "
+         "(write + re-read: ~3x the page-pool traffic)")
+
+
+# -----------------------------------------------------------------------------
+# quantize_pack: fused row quantization (+fp4 nibble pack)
+# -----------------------------------------------------------------------------
+
+def _qp_pallas(x, *, fmt, pack, bm):
+    return kops.quantize_rows_pallas(x, fmt=fmt, pack=pack, bm=bm)
+
+
+def _qp_xla(x, *, fmt, pack, bm):
+    q, s = kref.quantize_rows_ref(x, fmt=fmt)
+    if pack:
+        q = pack_fp4_axis(q, 1)
+    return q, s
+
+
+exec_plan.register(
+    "quantize_pack", "pallas_quantize_pack", backend="pallas",
+    run=_qp_pallas, priority=20, reference="xla_quantize", tol=1e-6,
+    predicate=lambda policy, ctx: {"fp4": ctx.get("fmt") == "fp4_e2m1",
+                                   "pack": ctx.get("pack", False)},
+    tests=("tests/test_kernels.py::test_quantize_pack_rows_matches_unpacked",),
+    note="absmax -> E2M1 cast -> nibble pack, one kernel")
+
+exec_plan.register(
+    "quantize_pack", "pallas_quantize_rows", backend="pallas",
+    run=_qp_pallas, priority=10, reference="xla_quantize", tol=1e-6,
+    predicate=lambda policy, ctx: {"unpacked": not ctx.get("pack", False)},
+    tests=("tests/test_kernels.py::test_quantize_rows_vs_ref",),
+    note="fused absmax + cast row quantizer")
+
+exec_plan.register(
+    "quantize_pack", "xla_quantize", backend="xla", run=_qp_xla, priority=0,
+    predicate=lambda policy, ctx: {
+        "pack_needs_fp4": (not ctx.get("pack", False))
+        or ctx.get("fmt") == "fp4_e2m1"},
+    tests=("tests/test_kernels.py::test_quantize_rows_vs_ref",),
+    note="jnp reference quantizer (+XLA nibble pack)")

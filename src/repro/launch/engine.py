@@ -24,8 +24,10 @@ Request lifecycle — admit -> prefill -> decode -> finish/evict:
   decode  : all running requests step together through one fixed-shape
             jit'd call; each slot writes its token into its own page
             (`paged_write_token`) and attends through its block-table row
-            (`dpa_paged_decode_attn`).  Idle slots point at the scratch
-            page and are ignored.
+            via the `core.exec_plan` ``paged_decode`` route — the Pallas
+            block-table kernel by default, with the `dpa_paged_decode_
+            attn` jnp gather fallback pinned bit-identical.  Idle slots
+            point at the scratch page and are ignored.
   finish  : on max_new (or eos) the request's pages return to the free
             list and its table row resets to scratch — eviction is page
             reuse, not memory churn.
@@ -56,6 +58,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import exec_plan
 from repro.core import kvcache as KV
 from repro.core.policy import get_policy
 from repro.distributed.step import make_serve_step
@@ -152,11 +155,22 @@ class Engine:
     def __init__(self, model, params, ecfg: EngineConfig):
         cfg = model.cfg
         pol = get_policy(cfg.policy)
-        if not pol.kv_quantized:
+        # the plan layer owns kernel selection: resolving the decode route
+        # up front validates the policy (a raw-f32-cache policy has no
+        # paged_decode route) and makes the report say which kernel runs
+        self._plan_ctx = dict(batch=ecfg.max_batch,
+                              page_size=ecfg.page_size,
+                              max_pages=ecfg.max_pages_per_req,
+                              kv_heads=cfg.n_kv_heads, hd=cfg.hd)
+        try:
+            self.plan = exec_plan.describe("paged_decode", pol,
+                                           **self._plan_ctx)
+        except exec_plan.PlanError as e:
             raise ValueError(
                 f"policy {cfg.policy!r} keeps a raw f32 cache; the paged "
                 "engine stores format-width codes — pick a fmt_kv preset "
-                "(e.g. kv8_attn_f32 for f32 arithmetic over an fp8 cache)")
+                "(e.g. kv8_attn_f32 for f32 arithmetic over an fp8 cache)"
+            ) from e
         if ecfg.s_max % ecfg.prefill_chunk:
             # the last chunk's fixed-size window must stay inside the
             # staging cache (dynamic_update_slice clamps, which would
@@ -408,6 +422,11 @@ class Engine:
         }
 
     def report(self, wall: float) -> dict:
+        # re-describe at report time: the decode step re-resolves its
+        # route per trace (e.g. REPRO_PAGED_KERNEL flipped after
+        # construction), and the report must state what actually ran
+        self.plan = exec_plan.describe("paged_decode", self.pol,
+                                       **self._plan_ctx)
         lat = np.array([r.t_finish - r.arrival for r in self.finished])
         ttft = np.array([r.t_first - r.arrival for r in self.finished])
         gen = sum(r.n_generated for r in self.finished)
@@ -421,6 +440,9 @@ class Engine:
             "p50_latency_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
             "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else 0.0,
             "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else 0.0,
+            "decode_route": self.plan["route"],
+            "decode_backend": self.plan["backend"],
+            "decode_bytes_per_step_layer": self.plan["bytes_moved"],
             **kv,
         }
 
@@ -443,4 +465,8 @@ def format_report(rep: dict, policy: str) -> str:
         f"{rep['static_bytes'] / mb:.2f} MB (B x S_max, same format) / "
         f"f32 {rep['static_f32_bytes'] / mb:.2f} MB; "
         f"page util peak {rep['page_util']:.0%} "
-        f"({rep['pages_peak']}/{rep['pages_total']} pages)")
+        f"({rep['pages_peak']}/{rep['pages_total']} pages)\n"
+        f"plan: decode via {rep['decode_route']} "
+        f"[{rep['decode_backend']}], "
+        f"{rep['decode_bytes_per_step_layer'] / 1e3:.1f} KB KV moved "
+        "per step/layer")

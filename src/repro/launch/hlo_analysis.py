@@ -208,3 +208,38 @@ def model_flops(cfg, shape, kind: str) -> float:
         tokens = shape["batch"] * shape["seq"]
         return 2.0 * n * tokens
     return 2.0 * n * shape["batch"]     # decode: one token per sequence
+
+
+# -----------------------------------------------------------------------------
+# execution-plan annotation: which kernel actually ran
+# -----------------------------------------------------------------------------
+
+def plan_routes(policy, shapes=None):
+    """-> {op: exec_plan.describe(...)} for the DPA ops a serving step
+    exercises under `policy`.
+
+    HLO text names fused XLA computations, not the repo's kernels; this
+    resolves the same execution-plan routes the model code resolves, so
+    an HLO/roofline report can state which kernel served each op
+    (`describe()` carries route, backend, predicate results, and the
+    bytes-moved estimate).  `shapes` optionally overrides the per-op ctx
+    (e.g. {"paged_decode": {"page_size": 16, "max_pages": 8, ...}})."""
+    from repro.core import exec_plan
+    from repro.core.policy import get_policy
+    pol = get_policy(policy)
+    ctx = {
+        "matmul": {"w_dtype": "float32"},
+        "flash_attn": {"sq": 128, "skv": 128, "use_flash": True},
+        "decode_attn": {"s_ctx": 128},
+        "paged_decode": {"page_size": 16, "max_pages": 8},
+    }
+    for op, over in (shapes or {}).items():
+        ctx.setdefault(op, {}).update(over)
+    out = {}
+    for op, c in ctx.items():
+        try:
+            out[op] = exec_plan.describe(op, pol, **c)
+        except exec_plan.PlanError:
+            out[op] = None           # policy has no viable route (e.g.
+                                     # raw-f32 cache has no paged decode)
+    return out

@@ -40,6 +40,23 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import build_model
 
 
+def report_plan(cfg, s_ctx: int) -> str:
+    """One line naming the exec-plan routes this policy's serving step
+    resolves to (the introspectable answer to "which kernel ran?").
+    Static mode only runs the contiguous-cache ops — paged_decode is the
+    engine's route and is deliberately left out here."""
+    from repro.launch.hlo_analysis import plan_routes
+    routes = plan_routes(cfg.policy, shapes={
+        "flash_attn": {"sq": s_ctx, "skv": s_ctx,
+                       "use_flash": cfg.use_flash},
+        "decode_attn": {"s_ctx": s_ctx, "kv_heads": cfg.n_kv_heads,
+                        "hd": cfg.hd}})
+    static_ops = ("matmul", "flash_attn", "decode_attn")
+    parts = [f"{op}->{routes[op]['route']}" for op in sorted(static_ops)
+             if routes.get(op) is not None]
+    return "plan: " + " ".join(parts)
+
+
 def report_kv_cache(cfg, batch: int, s_ctx: int) -> str:
     """One-line KV-cache footprint for the selected policy."""
     pol = get_policy(cfg.policy)
@@ -154,6 +171,7 @@ def main(argv=None):
         with mesh:
             return run_engine(cfg, model, args)
     print(report_kv_cache(cfg, args.batch, args.prompt_len + args.gen))
+    print(report_plan(cfg, args.prompt_len + args.gen))
     with mesh:
         params = model.init(jax.random.PRNGKey(0))
         prompt = jax.random.randint(jax.random.PRNGKey(1),

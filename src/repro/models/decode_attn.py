@@ -19,6 +19,14 @@ BlockSpec moves cache codes+scales HBM->VMEM and widens in the prologue
 saving on the XLA path is the cache's at-rest footprint, not the
 per-step traffic).
 
+Everything here is registered as `core.exec_plan` routes by
+`repro.kernels.registry`: `dpa_attention`/`sdpa_reference` are the
+masked fallbacks of the ``flash_attn`` op, `dpa_decode_attn` is the
+``decode_attn`` reference, and `dpa_paged_decode_attn` is the
+``paged_decode/jnp_gather`` reference the block-table Pallas kernel
+(`kernels.flash_attention.paged_decode_attention`) is pinned
+bit-identical against.
+
 Sharded flash-decoding (`flash_decode`)
 ---------------------------------------
 Shard-local KV-cache update + partial softmax.
@@ -48,6 +56,43 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.core.quantize import quant_rows_grid
+
+
+def build_sdpa_mask(sq: int, skv: int, offset, causal: bool, window,
+                    valid=None):
+    """(Sq, Skv) bool attention mask shared by the masked XLA routes.
+
+    offset: index of q position 0 within the kv timeline; window: local
+    attention width (> 0); valid: optional (Skv,) extra key-slot mask
+    (sliding caches)."""
+    qpos = offset + jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = mask & (kpos <= qpos)
+    if window is not None and window > 0:
+        mask = mask & (kpos > qpos - window)
+    if valid is not None:
+        mask = mask & valid[None, :]
+    return mask
+
+
+def sdpa_reference(q, k, v, mask, *, scale):
+    """The seed f32 attention datapath (any shape, GQA expansion).
+
+    q: (B,Sq,H,hd); k/v: (B,Skv,KV,hd); mask broadcastable to
+    (B,H,Sq,Skv).  f32 logits/softmax over compute-dtype operands — the
+    `flash_attn/xla_ref_attn` route every DPA attention mode is judged
+    against."""
+    g = q.shape[2] // k.shape[2]
+    kh = jnp.repeat(k, g, axis=2)     # (B, Skv, H, hd) — GQA expansion
+    vh = jnp.repeat(v, g, axis=2)
+    logits = jnp.einsum("bshd,bthd->bhst", q, kh,
+                        preferred_element_type=jnp.float32)
+    logits = logits * scale
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhst,bthd->bshd", probs, vh)
 
 
 def dpa_attention(q, k, v, mask, *, fmt: str, fmt_kv=None, scale,

@@ -4,6 +4,15 @@ Every projection routes through `repro.core.linear.apply_linear` — the
 DPA execution contract — so the paper's technique is a first-class policy
 on all ten architectures.  Layers are functional: init_* returns a params
 pytree, apply_* consumes it.  Decode paths carry explicit caches/states.
+
+Policy-mode kernel selection never happens here: every attention/matmul
+path asks `core.exec_plan.resolve(op, policy, **shape_ctx)` which route
+serves it (routes + predicates live in `repro.kernels.registry`), so
+this module carries no policy-mode branching and no lazy kernel
+imports.  The one inline gate left is the sharded `flash_decode` fast
+path in `apply_attention` — a *mesh-topology* selection (ambient mesh +
+raw-cache structure), not a policy mode, so it stays outside the plan
+table.
 """
 from __future__ import annotations
 
@@ -12,9 +21,12 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core.linear import NATIVE_NARROW, apply_linear, init_linear
+from repro.core import exec_plan
+from repro.core import kvcache as KV
+from repro.core.linear import apply_linear, dpa_grouped_dot, init_linear
 from repro.core.policy import get_policy
-from repro.distributed.sharding import maybe_shard
+from repro.distributed.sharding import _ambient_mesh, maybe_shard
+from repro.models.decode_attn import flash_decode
 
 # -----------------------------------------------------------------------------
 # norms
@@ -94,28 +106,18 @@ def _sdpa(q, k, v, *, causal, window, offset, valid=None, use_flash=False,
     materializes whole — the XLA-native flash-attention memory shape.
     policy: when its attention bits are set, QK^T and PV run the DPA
     contract (f32 accumulation over fmt_attn-grid operands, f32 softmax
-    core) via the Pallas kernel or the jnp fallback.
+    core); the plan layer resolves whether the Pallas flash kernel or a
+    masked jnp route serves this call.
     kv_on_grid: k/v already carry dequantized KV-cache values — skip the
     per-row fake-quant (re-quantizing grid values would double-round).
     """
     B, Sq, H, hd = q.shape
-    Skv, KV = k.shape[1], k.shape[2]
-    g = H // KV
-    dpa = policy is not None and policy.attn_enabled
-    kvf = policy.fmt_kv if (dpa and policy.kv_quantized) else None
-    if use_flash and Sq > 1 and valid is None and not (dpa and kv_on_grid):
-        from repro.kernels import ops as kops
-        if dpa:
-            out = kops.dpa_flash_attention(
-                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-                v.transpose(0, 2, 1, 3), fmt=policy.fmt_attn, fmt_kv=kvf,
-                causal=causal, window=window)
-        else:
-            out = kops.flash_attention(
-                q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-                v.transpose(0, 2, 1, 3), causal=causal, window=window)
-        return out.transpose(0, 2, 1, 3)
-    if q_chunk and Sq > q_chunk and Sq % q_chunk == 0 and valid is None:
+    policy = get_policy(policy if policy is not None else "fp32")
+    entry = exec_plan.resolve(
+        "flash_attn", policy, sq=Sq, skv=k.shape[1], use_flash=use_flash,
+        has_valid=valid is not None, kv_on_grid=kv_on_grid)
+    if (entry.backend != "pallas" and q_chunk and Sq > q_chunk
+            and Sq % q_chunk == 0 and valid is None):
         @jax.checkpoint
         def chunk(i):
             # checkpointed: the (q_chunk, Skv) logits are recomputed in
@@ -127,28 +129,9 @@ def _sdpa(q, k, v, *, causal, window, offset, valid=None, use_flash=False,
                          kv_on_grid=kv_on_grid)
         out = jax.lax.map(chunk, jnp.arange(Sq // q_chunk))
         return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, hd)
-    qpos = offset + jnp.arange(Sq)[:, None]
-    kpos = jnp.arange(Skv)[None, :]
-    mask = jnp.ones((Sq, Skv), bool)
-    if causal:
-        mask = mask & (kpos <= qpos)
-    if window is not None and window > 0:
-        mask = mask & (kpos > qpos - window)
-    if valid is not None:
-        mask = mask & valid[None, :]
-    if dpa:
-        from repro.models.decode_attn import dpa_attention
-        return dpa_attention(q, k, v, mask[None, None],
-                             fmt=policy.fmt_attn, fmt_kv=kvf,
-                             scale=hd ** -0.5, kv_on_grid=kv_on_grid)
-    kh = jnp.repeat(k, g, axis=2)     # (B, Skv, H, hd) — GQA expansion
-    vh = jnp.repeat(v, g, axis=2)
-    logits = jnp.einsum("bshd,bthd->bhst", q, kh,
-                        preferred_element_type=jnp.float32)
-    logits = logits * (hd ** -0.5)
-    logits = jnp.where(mask[None, None], logits, -1e30)
-    probs = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
-    return jnp.einsum("bhst,bthd->bshd", probs, vh)
+    return entry.run(q, k, v, policy=policy, causal=causal, window=window,
+                     offset=offset, valid=valid, scale=hd ** -0.5,
+                     kv_on_grid=kv_on_grid)
 
 
 def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
@@ -202,12 +185,10 @@ def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
     if (cache is not None and cross_kv is None and Sq == 1
             and cache_mode == "full" and cfg.flash_decode
             and "k" in cache):
-        from repro.distributed.sharding import _ambient_mesh
         mesh = _ambient_mesh()
         S_ctx = cache["k"].shape[1]
         if (mesh is not None and "model" in mesh.axis_names
                 and S_ctx % mesh.shape["model"] == 0):
-            from repro.models.decode_attn import flash_decode
             y, kc, vc = flash_decode(q, k, v, cache["k"], cache["v"],
                                      offset, mesh, scale=hd ** -0.5)
             y = maybe_shard(y.reshape(B, Sq, cfg.n_heads * hd),
@@ -224,16 +205,15 @@ def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
             raise ValueError("paged KV caches serve the decode step only "
                              "(Sq == 1); prefill runs against a "
                              "contiguous staging cache — see launch.engine")
-        from repro.core import kvcache as KV
-        from repro.models.decode_attn import dpa_paged_decode_attn
         new_cache = KV.paged_write_token(cache, k, v, offset,
                                          fmt=policy.fmt_kv,
                                          packed=policy.kv_packed)
-        y = dpa_paged_decode_attn(q, new_cache, offset,
-                                  fmt=policy.fmt_attn,
-                                  fmt_kv=policy.fmt_kv,
-                                  kv_packed=policy.kv_packed,
-                                  scale=hd ** -0.5)
+        entry = exec_plan.resolve(
+            "paged_decode", policy, batch=B,
+            page_size=cache["k_codes"].shape[1],
+            max_pages=cache["block_table"].shape[1],
+            kv_heads=cfg.n_kv_heads, hd=hd)
+        y = entry.run(q, new_cache, offset, policy=policy, scale=hd ** -0.5)
         y = maybe_shard(y.reshape(B, Sq, cfg.n_heads * hd),
                         "data", None, "model")
         y = apply_linear(params["wo"], y, policy)
@@ -242,17 +222,17 @@ def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
         # quantized KV cache (full mode): new rows quantize into the
         # format-width cache; attention consumes dequantized-in-prologue
         # values, so prefill and decode see identical numerics
-        from repro.core import kvcache as KV
         new_cache = KV.update_kv_cache(cache, k, v, offset,
                                        fmt=policy.fmt_kv,
                                        packed=policy.kv_packed)
         if Sq == 1:
             # decode: DPA QK^T / PV straight off the quantized cache
-            from repro.models.decode_attn import dpa_decode_attn
-            y = dpa_decode_attn(q, new_cache, offset, fmt=policy.fmt_attn,
-                                fmt_kv=policy.fmt_kv,
-                                kv_packed=policy.kv_packed,
-                                scale=hd ** -0.5)
+            entry = exec_plan.resolve(
+                "decode_attn", policy, batch=B,
+                s_ctx=new_cache["k_codes"].shape[1],
+                kv_heads=cfg.n_kv_heads, hd=hd)
+            y = entry.run(q, new_cache, offset, policy=policy,
+                          scale=hd ** -0.5)
             y = maybe_shard(y.reshape(B, Sq, cfg.n_heads * hd),
                             "data", None, "model")
             y = apply_linear(params["wo"], y, policy)
@@ -397,24 +377,9 @@ def apply_moe(params, x, cfg):
     buf, meta = jax.vmap(dispatch_row)(x, gate_i, gate_w)        # (B,E,C,d)
     buf = maybe_shard(buf, "data", "model", None, None)
 
-    from repro.core.quantize import fake_quant
-    acc_t = jnp.float32 if policy.accum == "fp32" else jnp.float16
-
     def expert_mm(name, z):
-        w = params[name]["w"]
-        if str(w.dtype) in NATIVE_NARROW:
-            from repro.core.quantize import cast_to, compute_scale
-            sz = compute_scale(z, policy.fmt_acts, axis=-1)
-            zq = cast_to(z.astype(jnp.float32) / sz, policy.fmt_acts)
-            out = jnp.einsum("becd,edf->becf", zq, w,
-                             preferred_element_type=jnp.float32) * sz
-            return out.astype(x.dtype)
-        w = w.astype(z.dtype)
-        if policy.enabled:
-            w = fake_quant(w, policy.fmt_weights, axis=1)
-            z = fake_quant(z, policy.fmt_acts)
-        return jnp.einsum("becd,edf->becf", z, w,
-                          preferred_element_type=acc_t).astype(x.dtype)
+        return dpa_grouped_dot(z, params[name]["w"], policy,
+                               eq="becd,edf->becf")
 
     if "wg" in params:
         h = jax.nn.silu(expert_mm("wg", buf).astype(jnp.float32)

@@ -1,0 +1,334 @@
+"""Execution-plan layer conformance: route table, resolver, equivalence.
+
+Three claims pinned here:
+
+  1. The resolver is deterministic and total: same (op, policy, shapes)
+     -> same route, every op has a reference fallback, and a resolution
+     failure names each candidate's predicate bits.
+  2. Every registered route is *reachable* — some (preset, shape-class)
+     selects it.  A route nothing selects is dead weight (the
+     `tools/plan_table.py` CI check enforces the test-coverage side).
+  3. Every route is pinned to its reference fallback at the registered
+     tolerance — bit-identical (tol 0) for pure-relayout routes like the
+     paged-decode block-table kernel, bounded-error for routes whose
+     scale granularity legitimately differs (kernel per-row/per-block
+     scales vs the fake-quant reference's per-tensor activations).
+"""
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exec_plan
+from repro.core import kvcache as KV
+from repro.core.policy import get_policy
+from repro.core.quantize import cast_to
+
+PAGED_PRESETS = ["attn_fp16_dpa", "kv8_attn_f32", "kv4_attn8_packed",
+                 "attn_fp4_packed"]
+
+
+def _rel_err(a, b):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    return float(np.max(np.abs(a - b)) / max(1e-6, np.max(np.abs(b))))
+
+
+# -----------------------------------------------------------------------------
+# shape-class samples per op: (ctx, run_args, run_kwargs) builders
+# -----------------------------------------------------------------------------
+
+def _matmul_cases():
+    """(preset, native_weights) sweep covering every matmul route."""
+    ks = jax.random.split(jax.random.PRNGKey(0), 2)
+    x = jax.random.normal(ks[0], (8, 32))
+    wf = jax.random.normal(ks[1], (32, 24)) * 0.5
+    cases = []
+    for preset in ["fp32", "fp16_dpa", "fp8_dpa", "w4a8", "fp8_dpa_fused",
+                   "fp4_dpa_packed", "fp4_dpa_fused", "w4a8_packed"]:
+        cases.append((preset, x, wf, wf))
+    wq = cast_to(wf, "fp8_e4m3")                 # pre-quantized serving
+    cases.append(("w8a16", x, wq, wf))
+    return cases
+
+
+def _attn_inputs(seed=1, sq=16, skv=16, b=2, h=4, kv=2, hd=16):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (b, sq, h, hd))
+    k = jax.random.normal(ks[1], (b, skv, kv, hd))
+    v = jax.random.normal(ks[2], (b, skv, kv, hd))
+    return q, k, v
+
+
+def _flash_cases():
+    """(preset, ctx-overrides) sweep covering every flash_attn route."""
+    return [
+        ("fp32", dict(use_flash=True)),           # pallas_f32_flash
+        ("attn_fp8_dpa", dict(use_flash=True)),   # pallas_dpa_flash
+        ("attn_fp16_dpa", dict(use_flash=False)),  # xla_dpa_attn
+        ("attn_fp8_dpa", dict(use_flash=True, has_valid=True)),  # masked dpa
+        ("fp32", dict(use_flash=False)),          # xla_ref_attn
+    ]
+
+
+def _paged_cache(pol, lengths, ps=8, n_kv=2, hd=16, seed=3):
+    """Paged cache via the shared relayout fixture, lengths crossing
+    page boundaries."""
+    B = len(lengths)
+    S = max(-(-n // ps) for n in lengths) * ps
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    k = jax.random.normal(ks[0], (B, S, n_kv, hd))
+    v = jax.random.normal(ks[1], (B, S, n_kv, hd))
+    ref = KV.update_kv_cache(
+        KV.init_kv_cache(B, S, n_kv, hd, fmt=pol.fmt_kv,
+                         packed=pol.kv_packed),
+        k, v, 0, fmt=pol.fmt_kv, packed=pol.kv_packed)
+    return KV.paged_from_contiguous(ref, lengths, page_size=ps)
+
+
+# -----------------------------------------------------------------------------
+# 1. resolver determinism / totality / introspection
+# -----------------------------------------------------------------------------
+
+def test_resolver_deterministic():
+    pol = get_policy("fp8_dpa_fused")
+    ctx = dict(w_dtype="float32")
+    first = exec_plan.resolve("matmul", pol, **ctx)
+    for _ in range(3):
+        assert exec_plan.resolve("matmul", pol, **ctx) is first
+    assert first.name == "pallas_fused"
+    # candidate order is (priority desc, name) — stable across calls
+    names = [e.name for e in exec_plan.candidates("matmul")]
+    assert names == [e.name for e in exec_plan.candidates("matmul")]
+    prios = [e.priority for e in exec_plan.candidates("matmul")]
+    assert prios == sorted(prios, reverse=True)
+
+
+def test_every_op_has_reference_fallback():
+    for op in exec_plan.ops():
+        refs = [e for e in exec_plan.candidates(op) if e.reference is None]
+        assert refs, op
+        # routes that declare a reference point at a registered one
+        for e in exec_plan.candidates(op):
+            if e.reference is not None:
+                assert exec_plan.reference_entry(e) is not None, (op, e.name)
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="registered twice"):
+        exec_plan.register("matmul", "xla_f32", backend="xla",
+                           run=lambda *a, **k: None)
+
+
+def test_unresolvable_names_predicates():
+    with pytest.raises(exec_plan.PlanError, match="kv_quantized"):
+        exec_plan.resolve("paged_decode", "fp16_dpa")
+
+
+def test_describe_reports_predicates_and_bytes():
+    d = exec_plan.describe("paged_decode", "kv4_attn8_packed", page_size=8,
+                           max_pages=4, kv_heads=2, hd=16)
+    assert d["op"] == "paged_decode"
+    assert d["route"] == "pallas_block_table"
+    assert d["predicates"] == {"kv_quantized": True, "not_disabled": True}
+    assert d["bytes_moved"] > 0
+    assert set(d["candidates"]) == {"pallas_block_table", "jnp_gather"}
+    # the gather fallback re-materializes the view: strictly more bytes
+    gather = exec_plan.route("paged_decode", "jnp_gather")
+    assert gather.bytes_moved(
+        get_policy("kv4_attn8_packed"),
+        dict(page_size=8, max_pages=4, kv_heads=2, hd=16)) > d["bytes_moved"]
+
+
+def test_paged_kernel_env_kill_switch(monkeypatch):
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "0")
+    e = exec_plan.resolve("paged_decode", "kv4_attn8_packed")
+    assert e.name == "jnp_gather"
+
+
+# -----------------------------------------------------------------------------
+# 2. every registered route is reachable by some (preset, shape-class)
+# -----------------------------------------------------------------------------
+
+def test_every_route_reachable(monkeypatch):
+    seen = {op: set() for op in exec_plan.ops()}
+    for preset, x, w, _ in _matmul_cases():
+        e = exec_plan.resolve("matmul", preset, w_dtype=str(w.dtype))
+        seen["matmul"].add(e.name)
+        e = exec_plan.resolve("grouped_matmul", preset,
+                              w_dtype=str(w.dtype), eq="gti,gio->gto")
+        seen["grouped_matmul"].add(e.name)
+    for preset, ctx in _flash_cases():
+        e = exec_plan.resolve("flash_attn", preset,
+                              **dict(dict(sq=16, skv=16), **ctx))
+        seen["flash_attn"].add(e.name)
+    seen["decode_attn"].add(
+        exec_plan.resolve("decode_attn", "kv8_attn_f32", s_ctx=32).name)
+    seen["paged_decode"].add(
+        exec_plan.resolve("paged_decode", "kv4_attn8_packed").name)
+    monkeypatch.setenv("REPRO_PAGED_KERNEL", "0")
+    seen["paged_decode"].add(
+        exec_plan.resolve("paged_decode", "kv4_attn8_packed").name)
+    monkeypatch.delenv("REPRO_PAGED_KERNEL")
+    for fmt, pack in [("fp8_e4m3", False), ("fp4_e2m1", True)]:
+        seen["quantize_pack"].add(
+            exec_plan.resolve("quantize_pack", None, fmt=fmt, pack=pack).name)
+    seen["quantize_pack"].add("xla_quantize")   # reference, pinned below
+    for op in exec_plan.ops():
+        registered = {e.name for e in exec_plan.candidates(op)}
+        missing = registered - seen[op]
+        # reference fallbacks may only be reachable as references —
+        # they are still exercised by the equivalence sweep below
+        refs = {e.name for e in exec_plan.candidates(op)
+                if e.reference is None}
+        assert missing <= refs, (op, missing)
+
+
+# -----------------------------------------------------------------------------
+# 3. every route pinned to its reference fallback
+# -----------------------------------------------------------------------------
+
+def test_route_pinned_to_reference():
+    """Sweep (op, preset, shape-class); wherever the resolved route has a
+    reference fallback, outputs agree within the registered tolerance."""
+    checked = 0
+    for preset, x, w, wf in _matmul_cases():
+        pol = get_policy(preset)
+        e = exec_plan.resolve("matmul", pol, w_dtype=str(w.dtype))
+        ref = exec_plan.reference_entry(e)
+        if ref is None:
+            continue
+        got = e.run(x, w, pol)
+        want = ref.run(x, wf, pol)
+        assert _rel_err(got, want) <= e.tol, (preset, e.name, _rel_err(got, want))
+        checked += 1
+        eg = exec_plan.resolve("grouped_matmul", pol, w_dtype=str(w.dtype))
+        refg = exec_plan.reference_entry(eg)
+        if refg is not None:
+            got = eg.run(x[None], w[None], pol, eq="gti,gio->gto")
+            want = refg.run(x[None], wf[None], pol, eq="gti,gio->gto")
+            assert _rel_err(got, want) <= eg.tol, (preset, eg.name)
+            checked += 1
+    q, k, v = _attn_inputs()
+    for preset, ctx in _flash_cases():
+        pol = get_policy(preset)
+        full = dict(sq=q.shape[1], skv=k.shape[1], **ctx)
+        e = exec_plan.resolve("flash_attn", pol, **full)
+        ref = exec_plan.reference_entry(e)
+        if ref is None:
+            continue
+        kw = dict(policy=pol, causal=True, window=None, offset=0,
+                  valid=None, scale=q.shape[-1] ** -0.5, kv_on_grid=False)
+        got, want = e.run(q, k, v, **kw), ref.run(q, k, v, **kw)
+        assert _rel_err(got, want) <= e.tol, (preset, e.name, _rel_err(got, want))
+        checked += 1
+    ks = jax.random.split(jax.random.PRNGKey(7), 2)
+    x2 = jax.random.normal(ks[0], (9, 32))
+    for fmt, pack in [("fp16", False), ("fp8_e4m3", False),
+                      ("fp4_e2m1", False), ("fp4_e2m1", True)]:
+        e = exec_plan.resolve("quantize_pack", None, fmt=fmt, pack=pack)
+        ref = exec_plan.reference_entry(e)
+        if ref is None:
+            continue
+        gq, gs = e.run(x2, fmt=fmt, pack=pack, bm=128)
+        wq, ws = ref.run(x2, fmt=fmt, pack=pack, bm=128)
+        # codes land on the same grid points; scales may differ by the
+        # kernel-vs-XLA fusion ulp the registered tol pins
+        assert np.array_equal(np.asarray(gq, np.float32)
+                              if gq.dtype != jnp.uint8 else np.asarray(gq),
+                              np.asarray(wq, np.float32)
+                              if wq.dtype != jnp.uint8 else np.asarray(wq))
+        np.testing.assert_allclose(np.asarray(gs), np.asarray(ws),
+                                   rtol=e.tol)
+        checked += 1
+    assert checked >= 10
+
+
+@pytest.mark.parametrize("pol_name", PAGED_PRESETS)
+def test_paged_decode_kernel_bit_identical(pol_name):
+    """The block-table Pallas kernel == the jnp gather fallback, bit for
+    bit, across every Table-I KV format — packed fp4 included, at odd
+    lengths whose live rows cross page boundaries mid-page."""
+    pol = get_policy(pol_name)
+    lengths = [13, 5, 17]                   # odd: partial tail pages
+    cache = _paged_cache(pol, lengths)
+    B, hd = len(lengths), 16
+    q = jax.random.normal(jax.random.PRNGKey(9), (B, 1, 4, hd))
+    positions = jnp.asarray([n - 1 for n in lengths], jnp.int32)
+    kernel = exec_plan.route("paged_decode", "pallas_block_table")
+    gather = exec_plan.route("paged_decode", "jnp_gather")
+    assert kernel.tol == 0.0 and kernel.reference == "jnp_gather"
+    got = kernel.run(q, cache, positions, policy=pol, scale=hd ** -0.5)
+    want = gather.run(q, cache, positions, policy=pol, scale=hd ** -0.5)
+    assert got.dtype == want.dtype and got.shape == want.shape
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_paged_decode_kernel_masks_mid_page_positions():
+    """Positions below the live length mask the tail — kernel and
+    fallback agree at every position inside a page, not just the last."""
+    pol = get_policy("kv4_attn8_packed")
+    cache = _paged_cache(pol, [17, 17])
+    q = jax.random.normal(jax.random.PRNGKey(11), (2, 1, 4, 16))
+    kernel = exec_plan.route("paged_decode", "pallas_block_table")
+    gather = exec_plan.route("paged_decode", "jnp_gather")
+    for positions in ([0, 16], [7, 8], [15, 3]):
+        pos = jnp.asarray(positions, jnp.int32)
+        got = kernel.run(q, cache, pos, policy=pol, scale=16 ** -0.5)
+        want = gather.run(q, cache, pos, policy=pol, scale=16 ** -0.5)
+        assert np.array_equal(np.asarray(got), np.asarray(want)), positions
+
+
+def test_selection_pin_table():
+    """The scattered gates this layer replaced, as explicit expectations."""
+    pins = [
+        ("matmul", "fp32", dict(w_dtype="float32"), "xla_f32"),
+        ("matmul", "fp8_dpa", dict(w_dtype="float32"), "xla_fake_quant"),
+        ("matmul", "fp8_dpa", dict(w_dtype="float8_e4m3fn"),
+         "xla_native_narrow"),
+        ("matmul", "fp8_dpa_fused", dict(w_dtype="float32"), "pallas_fused"),
+        ("matmul", "fp4_dpa_packed", dict(w_dtype="float32"),
+         "pallas_prequant"),
+        ("flash_attn", "fp32", dict(sq=16, skv=16, use_flash=True),
+         "pallas_f32_flash"),
+        ("flash_attn", "attn_fp8_dpa", dict(sq=16, skv=16, use_flash=True),
+         "pallas_dpa_flash"),
+        ("flash_attn", "attn_fp8_dpa",
+         dict(sq=16, skv=16, use_flash=True, kv_on_grid=True),
+         "xla_dpa_attn"),
+        ("flash_attn", "attn_fp8_dpa", dict(sq=1, skv=16, use_flash=True),
+         "xla_dpa_attn"),
+        ("flash_attn", "fp32", dict(sq=1, skv=16, use_flash=True),
+         "xla_ref_attn"),
+        ("paged_decode", "kv4_attn8_packed", {}, "pallas_block_table"),
+        ("quantize_pack", None, dict(fmt="fp4_e2m1", pack=True),
+         "pallas_quantize_pack"),
+    ]
+    for op, pol, ctx, want in pins:
+        assert exec_plan.resolve(op, pol, **ctx).name == want, (op, pol, ctx)
+
+
+def test_quantize_pack_rejects_non_fp4_pack():
+    with pytest.raises(exec_plan.PlanError):
+        exec_plan.resolve("quantize_pack", None, fmt="fp8_e4m3", pack=True)
+
+
+def test_env_kill_switch_restored():
+    """Paranoia: the monkeypatched kill switch really is off again."""
+    assert os.environ.get("REPRO_PAGED_KERNEL", "1") != "0"
+    e = exec_plan.resolve("paged_decode", "kv4_attn8_packed")
+    assert e.name == "pallas_block_table"
+
+
+def test_hlo_plan_routes_states_kernels():
+    """launch.hlo_analysis.plan_routes names the kernel each op runs."""
+    from repro.launch.hlo_analysis import plan_routes
+    routes = plan_routes("w4a8_kv4_attn8")
+    assert routes["matmul"]["route"] == "pallas_fused"
+    assert routes["paged_decode"]["route"] == "pallas_block_table"
+    assert routes["decode_attn"]["route"] == "xla_dpa_decode"
+    # a raw-f32-cache policy has no paged route — reported as None
+    assert plan_routes("fp16_dpa")["paged_decode"] is None
+    assert plan_routes("fp16_dpa")["matmul"]["route"] == "xla_fake_quant"

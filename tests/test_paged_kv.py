@@ -151,13 +151,7 @@ def test_paged_decode_attn_matches_contiguous(pol_name):
         KV.init_kv_cache(B, S, n_kv, hd, fmt=pol.fmt_kv,
                          packed=pol.kv_packed),
         k, v, 0, fmt=pol.fmt_kv, packed=pol.kv_packed)
-    _, table, pages = _alloc_tables([S] * B, n_pg, capacity=B * n_pg + 2)
-    cache = dict(KV.init_paged_kv_cache(B * n_pg + 2, PS, n_kv, hd,
-                                        fmt=pol.fmt_kv, packed=pol.kv_packed),
-                 block_table=jnp.asarray(table))
-    for b in range(B):
-        rows = {key: ref[key][b] for key in KV.QUANT_KEYS}
-        cache = KV.write_prefill_rows(cache, rows, pages[b], S)
+    cache = KV.paged_from_contiguous(ref, [S] * B, page_size=PS)
     positions = jnp.asarray([5, S - 1, 12], jnp.int32)
     got = dpa_paged_decode_attn(q, cache, positions, fmt=pol.fmt_attn,
                                 fmt_kv=pol.fmt_kv, kv_packed=pol.kv_packed,

@@ -1,0 +1,85 @@
+"""Print the execution-plan routing table; fail on unexercised routes.
+
+Every `core.exec_plan` route registers the tier-1 tests that exercise it
+(`PlanEntry.tests`).  This tool renders the full table — op, route,
+backend, priority, reference fallback + pinned tolerance, and the tests
+— and verifies the coverage claim holds on disk:
+
+  - every registered route names at least one test;
+  - every named test file exists, and a ``file::name`` entry names a
+    test function actually defined in that file (parametrized variants
+    match by prefix).
+
+Run by the CI docs job (alongside `tools/check_docs.py`), so registering
+a kernel route without pinning it to a test fails CI the same way a
+dangling doc link does.
+
+Usage: python tools/plan_table.py [--check]   (--check: no table, just
+the coverage verdict; default prints both)
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def _test_exists(ref: str) -> bool:
+    """'tests/foo.py' or 'tests/foo.py::test_name' resolves on disk."""
+    path, _, name = ref.partition("::")
+    full = os.path.join(ROOT, path)
+    if not os.path.isfile(full):
+        return False
+    if not name:
+        return True
+    with open(full, encoding="utf-8") as f:
+        text = f.read()
+    return re.search(rf"^def {re.escape(name)}\b", text, re.M) is not None
+
+
+def collect():
+    from repro.core import exec_plan
+    rows, errors = [], []
+    for op in exec_plan.ops():
+        for e in exec_plan.candidates(op):
+            rows.append(e)
+            if not e.tests:
+                errors.append(f"{op}/{e.name}: no tier-1 test registered")
+            for t in e.tests:
+                if not _test_exists(t):
+                    errors.append(f"{op}/{e.name}: test {t!r} not found")
+    return rows, errors
+
+
+def render(rows) -> str:
+    head = f"{'op':<15} {'route':<22} {'backend':<7} {'prio':>4} " \
+           f"{'reference (tol)':<26} tests"
+    lines = [head, "-" * len(head)]
+    for e in rows:
+        ref = f"{e.reference} ({e.tol:g})" if e.reference else "— (is ref)"
+        tests = ", ".join(t.split("/")[-1] for t in e.tests) or "NONE"
+        lines.append(f"{e.op:<15} {e.name:<22} {e.backend:<7} "
+                     f"{e.priority:>4} {ref:<26} {tests}")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    rows, errors = collect()
+    if "--check" not in argv:
+        print(render(rows))
+        print()
+    if errors:
+        print(f"plan table check: {len(errors)} problem(s)")
+        for err in errors:
+            print(f"  FAIL {err}")
+        return 1
+    print(f"plan table check: {len(rows)} routes, all named tests exist")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
