@@ -26,6 +26,20 @@ cache prices them at live tokens (page-granular).  Rows report
                                tight; the wall-clock ratio and decode
                                tokens/s are loose CPU-interpret
                                tripwires.
+  engine/spec_decode         : self-speculative decoding (greedy) on the
+                               same workload.  acceptance_self (a
+                               self-draft, draft == verify policy) is
+                               pinned EXACTLY 1.0 — the k draft steps
+                               and the batched verify are the same
+                               computation, so any miss means the
+                               multi-token verify path drifted from
+                               stepped decode.  acceptance/eff_tokens of
+                               the real all-fp4 draft and the spec-vs-
+                               plain wall ratio are loose tripwires
+                               (random-init weights; CPU, where drafts
+                               cost the same as verifies — the
+                               throughput win needs the 8x fp4 DPA
+                               rate the hwmodel prices).
 """
 from __future__ import annotations
 
@@ -141,5 +155,51 @@ def paged_decode_kernel_vs_gather():
              f"tokens_per_s={B / (us_k / 1e6):.1f}")]
 
 
-ALL = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather]
-SMOKE = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather]
+def spec_decode():
+    """Speculative vs plain greedy decode on one mixed workload."""
+    import time
+
+    import jax
+
+    from repro.configs import get_config, reduce_config
+    from repro.launch.engine import Engine, EngineConfig, SpecConfig, \
+        synthetic_workload
+    from repro.models import build_model
+
+    cfg = reduce_config(get_config("qwen3-4b")).replace(
+        policy="kv4_attn8_packed")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(page_size=8, n_pages=48, max_batch=4,
+                        max_pages_per_req=6, token_budget=32,
+                        prefill_chunk=8)
+    k = 3
+
+    def run(spec, seed=0):
+        engine = Engine(model, params, ecfg, spec=spec)
+        # warm-up compiles draft/verify/decode; the timed run reuses them
+        engine.run(synthetic_workload(2, vocab=cfg.vocab_size, seed=1,
+                                      prompt_range=(8, 24),
+                                      gen_range=(4, 10)))
+        engine.reset_stats()
+        reqs = synthetic_workload(6, vocab=cfg.vocab_size, seed=seed,
+                                  prompt_range=(8, 24), gen_range=(4, 10))
+        t0 = time.perf_counter()
+        rep = engine.run(reqs)
+        return (time.perf_counter() - t0) * 1e6, rep
+
+    us_plain, _ = run(None)
+    us_spec, rep = run(SpecConfig("w4a4_kv4_attn4", k=k))
+    _, rep_self = run(SpecConfig("kv4_attn8_packed", k=k))
+    return [("engine/spec_decode", us_spec,
+             f"acceptance_self={rep_self['acceptance_rate']:.3f}x "
+             f"acceptance_fp4={rep['acceptance_rate']:.2f}x "
+             f"eff_tokens_per_round={rep['eff_tokens_per_round']:.2f}x "
+             f"spec_vs_plain={us_spec / us_plain:.2f}x "
+             f"tokens_per_s={rep['tokens_per_s']:.1f}")]
+
+
+ALL = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather,
+       spec_decode]
+SMOKE = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather,
+         spec_decode]

@@ -24,6 +24,8 @@ Ops routed here:
   flash_attn      full-sequence attention (`models.layers._sdpa`)
   decode_attn     single-token decode over the contiguous quantized cache
   paged_decode    single-token decode over the paged cache (block table)
+  verify_attn     S_q causal query tokens over the paged cache (the
+                  speculative-decoding verify pass)
   quantize_pack   fused row quantization (+fp4 nibble pack)
 
 Every resolved plan is introspectable: `describe(op, policy, **ctx)`

@@ -190,27 +190,42 @@ def make_block_table(n_slots: int, max_pages: int):
     return jnp.full((n_slots, max_pages), SCRATCH_PAGE, jnp.int32)
 
 
-def paged_write_token(cache, k_new, v_new, positions, *, fmt,
-                      packed: bool = False):
-    """Quantize one token per batch slot into its page.
+def paged_write_tokens(cache, k_new, v_new, positions, *, fmt,
+                       packed: bool = False):
+    """Quantize a run of S_new tokens per batch slot into its pages.
 
-    k_new/v_new: (B, 1, KV, hd); positions: (B,) i32 absolute token index
-    per request.  Row b lands at (table[b, pos_b // page], pos_b % page).
+    k_new/v_new: (B, S_new, KV, hd); positions: (B,) i32 absolute index
+    of each request's *first* new token (token i of row b lands at
+    timeline position ``positions[b] + i``, i.e. at
+    (table[b, p // page], p % page)).  S_new == 1 is the decode step;
+    S_new > 1 is the speculative draft/verify window, whose query rows
+    quantize independently per row (absmax over head_dim), so a
+    multi-token write is bit-identical to S_new single-token writes.
     Idle slots carry an all-scratch table row, so their writes hit the
-    scratch page and never touch live data.  Returns the cache pytree with
-    updated pools (block_table passes through unchanged)."""
+    scratch page and never touch live data.  Returns the cache pytree
+    with updated pools (block_table passes through unchanged)."""
     ps = cache["k_codes"].shape[1]
     table = cache["block_table"]
-    pos = jnp.asarray(positions, jnp.int32)
-    page = jnp.take_along_axis(table, (pos // ps)[:, None], axis=1)[:, 0]
+    s_new = k_new.shape[1]
+    pos = jnp.asarray(positions, jnp.int32)[:, None] \
+        + jnp.arange(s_new, dtype=jnp.int32)[None]          # (B, S_new)
+    page = jnp.take_along_axis(table, pos // ps, axis=1)    # (B, S_new)
     slot = pos % ps
     kc, ks = quantize_kv(k_new, fmt=fmt, packed=packed)
     vc, vs = quantize_kv(v_new, fmt=fmt, packed=packed)
     out = dict(cache)
     for key, new in (("k_codes", kc), ("k_scale", ks),
                      ("v_codes", vc), ("v_scale", vs)):
-        out[key] = cache[key].at[page, slot].set(new[:, 0])
+        out[key] = cache[key].at[page, slot].set(new)
     return out
+
+
+def paged_write_token(cache, k_new, v_new, positions, *, fmt,
+                      packed: bool = False):
+    """Quantize one token per batch slot into its page (the decode step;
+    see `paged_write_tokens` for the multi-token contract)."""
+    return paged_write_tokens(cache, k_new, v_new, positions, fmt=fmt,
+                              packed=packed)
 
 
 def gather_paged_kv(cache):
@@ -311,7 +326,20 @@ class PageAllocator:
     Page 0 is reserved as the scratch page idle decode slots write to, so
     `capacity` pages yield `capacity - 1` allocatable ones.  Freed pages
     return to the free list and are reused LIFO (hot pages stay cache-
-    warm).  Tracks in-use count and the peak for utilization reporting."""
+    warm).  Tracks in-use count and the peak for utilization reporting.
+
+    Reservations (the speculative-decoding commit/rollback protocol):
+    a request may `reserve(n)` pages without popping them — reserved
+    pages stay on the free list but are excluded from `can_alloc`, so no
+    other request can claim them (the engine's no-OOM-mid-decode
+    invariant survives lazy committing).  `alloc(n, reserved=True)`
+    *commits* pages out of the caller's reservation as its timeline
+    grows; `free(pages, to_reserved=True)` rolls committed pages back
+    into the reservation (the KV-rollback path: pages holding only
+    rejected draft tokens return without becoming grabbable by anyone
+    else); `unreserve(n)` releases the unused remainder at finish.
+    Invariant: ``reserved <= n_free`` always — every reserved page is
+    physically on the free list until committed."""
 
     def __init__(self, capacity: int):
         if capacity < 2:
@@ -319,6 +347,7 @@ class PageAllocator:
         self.capacity = capacity
         self._free = list(range(capacity - 1, 0, -1))   # pop() -> page 1 first
         self._used = set()
+        self.reserved = 0
         self.peak_in_use = 0
 
     @property
@@ -329,20 +358,49 @@ class PageAllocator:
     def in_use(self) -> int:
         return len(self._used)
 
-    def can_alloc(self, n: int) -> bool:
-        return n <= self.n_free
+    @property
+    def n_available(self) -> int:
+        """Free pages not spoken for by a reservation."""
+        return self.n_free - self.reserved
 
-    def alloc(self, n: int) -> list:
+    def can_alloc(self, n: int) -> bool:
+        return n <= self.n_available
+
+    def reserve(self, n: int) -> None:
+        """Earmark `n` free pages without popping them off the free list."""
+        if n > self.n_available:
+            raise MemoryError(f"reserve({n}): only {self.n_available} "
+                              "pages available")
+        self.reserved += n
+
+    def unreserve(self, n: int) -> None:
+        """Release `n` reserved-but-uncommitted pages back to the pool."""
+        if n > self.reserved:
+            raise ValueError(f"unreserve({n}) exceeds reserved "
+                             f"({self.reserved})")
+        self.reserved -= n
+
+    def alloc(self, n: int, *, reserved: bool = False) -> list:
         """Pop `n` pages off the free list (raises if short — callers gate
-        admission on `can_alloc`, so running out mid-flight is a bug)."""
-        if not self.can_alloc(n):
-            raise MemoryError(f"alloc({n}): only {self.n_free} pages free")
+        admission on `can_alloc`, so running out mid-flight is a bug).
+        With `reserved`, the pages commit out of the caller's reservation
+        (which must cover them)."""
+        if reserved:
+            if n > self.reserved:
+                raise ValueError(f"alloc({n}, reserved=True) exceeds "
+                                 f"reserved ({self.reserved})")
+            self.reserved -= n
+        elif not self.can_alloc(n):
+            raise MemoryError(f"alloc({n}): only {self.n_available} pages "
+                              "available")
         pages = [self._free.pop() for _ in range(n)]
         self._used.update(pages)
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return pages
 
-    def free(self, pages) -> None:
+    def free(self, pages, *, to_reserved: bool = False) -> None:
+        """Return pages to the free list; with `to_reserved`, back into
+        the caller's reservation (rollback) instead of the open pool."""
         for p in pages:
             if p == SCRATCH_PAGE:
                 raise ValueError("page 0 is the reserved scratch page")
@@ -350,6 +408,8 @@ class PageAllocator:
                 raise ValueError(f"double free of page {p}")
             self._used.remove(p)
             self._free.append(p)
+        if to_reserved:
+            self.reserved += len(pages)
 
     def utilization(self) -> float:
         """Fraction of allocatable pages currently in use."""

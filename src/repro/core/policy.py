@@ -133,6 +133,16 @@ POLICIES = {
                                              kv_packed=True),
     # cache-only compression: attention arithmetic stays f32
     "kv8_attn_f32": TransPrecisionPolicy(fmt_kv="fp8_e4m3"),
+    "kv16_attn_f32": TransPrecisionPolicy(fmt_kv="fp16"),
+    # self-speculative draft mode: every matmul side (linears AND both
+    # attention matmuls) runs fp4-grid operands — the paper's 8-term DPA
+    # route end to end — over the same packed-fp4 cache the fp4-KV
+    # serving presets keep, so the draft and verify policies share one
+    # page pool (serving.spec_decode pairs this with kv4_attn8_packed)
+    "w4a4_kv4_attn4": TransPrecisionPolicy("fp4_e2m1", "fp4_e2m1",
+                                           fmt_attn="fp4_e2m1",
+                                           fmt_kv="fp4_e2m1",
+                                           kv_packed=True),
     # full serving path: packed-fp4 weights + fused fp8 activations on the
     # linears, fp8 DPA attention, packed-fp4 KV cache
     "w4a8_kv4_attn8": TransPrecisionPolicy("fp4_e2m1", "fp8_e4m3",

@@ -28,6 +28,7 @@ Uniform run signatures per op:
                       scale, kv_on_grid) -> (B, Sq, H, hd)
   decode_attn     run(q, cache, offset, *, policy, scale) -> (B,1,H,hd)
   paged_decode    run(q, cache, positions, *, policy, scale) -> (B,1,H,hd)
+  verify_attn     run(q, cache, positions, *, policy, scale) -> (B,Sq,H,hd)
   quantize_pack   run(x, *, fmt, pack, bm) -> (codes, scales)
 """
 from __future__ import annotations
@@ -347,6 +348,36 @@ exec_plan.register(
            "contiguous",),
     note="gather_paged_kv re-materializes the contiguous view in HBM "
          "(write + re-read: ~3x the page-pool traffic)")
+
+
+# -----------------------------------------------------------------------------
+# verify_attn: S_q causal query tokens scored against the paged cache
+# (the speculative-decoding verify pass; see serving.spec_decode)
+# -----------------------------------------------------------------------------
+
+def _va_gather(q, cache, positions, *, policy, scale):
+    return D.dpa_paged_verify_attn(q, cache, positions, fmt=policy.fmt_attn,
+                                   fmt_kv=policy.fmt_kv,
+                                   kv_packed=policy.kv_packed, scale=scale)
+
+
+exec_plan.register(
+    "verify_attn", "jnp_gather", backend="xla", run=_va_gather, priority=0,
+    predicate=lambda policy, ctx: {"kv_quantized": policy.kv_quantized},
+    # gather re-materializes the view (read pages + write + re-read, the
+    # jnp_gather 3x), then the batch-fold repeats it per query row
+    # (write + attention read: 2 more view passes per sq) — the price of
+    # the bit-exact decode-shaped reductions, amortized over k+1 scored
+    # tokens
+    bytes_moved=lambda policy, ctx: (3 + 2 * ctx.get("sq", 1))
+    * _kv_rows_bytes(policy, _pd_view_rows(ctx), ctx.get("hd", 0)),
+    tests=("tests/test_spec_decode.py::test_verify_attn_matches_stepped_"
+           "paged_decode",
+           "tests/test_spec_decode.py::test_spec_engine_greedy_matches_"
+           "plain_engine"),
+    note="speculative verify: per-request causal mask over the gathered "
+         "block-table view (chunked-prefill masking, paged pool); row i "
+         "is bit-identical to a decode step at positions[b] + i")
 
 
 # -----------------------------------------------------------------------------

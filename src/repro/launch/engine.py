@@ -39,11 +39,28 @@ chunks of the oldest admitted request — so long prompts cannot starve
 in-flight generations (chunked-prefill interleaving, the
 Sarathi/DPUV4E-style scheduler-over-shared-engine structure).
 
+Sampling: tokens draw through `repro.serving.sampler` — fixed-shape
+temperature/top-k/top-p with per-request threefry streams keyed on
+(seed, request id, token index), so a request's tokens are independent
+of batch composition.  The default `SamplerConfig()` is greedy and
+bit-identical to the argmax path this engine shipped with.
+
+Speculative decoding (`SpecConfig`): the same weights draft k tokens
+per request under a cheap low-precision policy, then ONE batched pass
+under the serving policy verifies all k via the ``verify_attn`` route
+and accepts with rejection sampling (`repro.serving.spec_decode`) —
+greedy outputs stay token-for-token identical to plain decode.  Spec
+mode commits pages lazily out of an up-front `PageAllocator`
+reservation (the no-OOM guarantee survives) and rolls back pages
+holding only rejected-draft rows after every round.  The token budget
+prices a round at its real work: k draft + k+1 verify tokens per live
+request.
+
 Numerics contract: every path reuses the PR-2 quantized-cache machinery
 (same `quant_rows_grid` recipe, same dequant-in-prologue attention), and
 paging is pure relayout, so per-request greedy outputs are bit-identical
 to the static-batch `serve.generate` path (pinned by
-`tests/test_engine.py`).
+`tests/test_engine.py`), speculative or not (`tests/test_spec_decode.py`).
 
 Entry points: `Engine` (programmatic), `synthetic_workload` (open-loop
 Poisson traffic), `python -m repro.launch.serve --engine` (CLI demo).
@@ -61,7 +78,10 @@ import numpy as np
 from repro.core import exec_plan
 from repro.core import kvcache as KV
 from repro.core.policy import get_policy
-from repro.distributed.step import make_serve_step
+from repro.serving import sampler as SMP
+from repro.serving import spec_decode as SPD
+from repro.serving.sampler import SamplerConfig
+from repro.serving.spec_decode import SpecConfig
 
 WAITING, PREFILL, DECODE, FINISHED = "waiting", "prefill", "decode", "done"
 
@@ -96,6 +116,7 @@ class Request:
     state: str = WAITING
     out_tokens: list = dataclasses.field(default_factory=list)
     pages: list = dataclasses.field(default_factory=list)
+    reserved_left: int = 0       # reserved-but-uncommitted pages (spec mode)
     slot: int = -1
     pos: int = 0                 # tokens written to the cache so far
     prefill_done: int = 0
@@ -150,9 +171,15 @@ def _attn_group_kinds(cfg):
 
 
 class Engine:
-    """Continuous-batching engine bound to one model + params."""
+    """Continuous-batching engine bound to one model + params.
 
-    def __init__(self, model, params, ecfg: EngineConfig):
+    `sampler` selects the token-draw rule (default: greedy argmax);
+    `spec` turns on self-speculative decoding (draft under
+    `spec.draft_policy`, verify under the model's own policy)."""
+
+    def __init__(self, model, params, ecfg: EngineConfig, *,
+                 sampler: Optional[SamplerConfig] = None,
+                 spec: Optional[SpecConfig] = None):
         cfg = model.cfg
         pol = get_policy(cfg.policy)
         # the plan layer owns kernel selection: resolving the decode route
@@ -180,6 +207,8 @@ class Engine:
         _, self._n_groups, self._n_tail = _attn_group_kinds(cfg)
         self.model, self.params, self.ecfg = model, params, ecfg
         self.cfg, self.pol = cfg, pol
+        self.sampler = sampler or SamplerConfig()
+        self.spec = spec
         self.alloc = KV.PageAllocator(ecfg.n_pages)
         self._table = np.full((ecfg.max_batch, ecfg.max_pages_per_req),
                               KV.SCRATCH_PAGE, np.int32)
@@ -187,14 +216,55 @@ class Engine:
         # staging cache for chunked prefill: the contiguous PR-2 layout
         self._staging = model.init_caches(1, ecfg.s_max)
         self._prefill_fn = jax.jit(model.decode_step)
-        self._decode_fn = jax.jit(make_serve_step(model),
+        self._decode_fn = jax.jit(self._make_decode_step(),
                                   donate_argnums=(2,))
+        if spec is not None:
+            self.draft_pol = SPD.validate_policy_pair(spec.draft_policy,
+                                                      pol)
+            from repro.models import build_model
+            self.draft_model = build_model(
+                cfg.replace(policy=spec.draft_policy))
+            self.draft_plan = exec_plan.describe("paged_decode",
+                                                 self.draft_pol,
+                                                 **self._plan_ctx)
+            self.verify_plan = exec_plan.describe("verify_attn", pol,
+                                                  sq=spec.k + 1,
+                                                  **self._plan_ctx)
+            self._draft_fn = jax.jit(
+                SPD.make_draft_step(self.draft_model, self.sampler),
+                donate_argnums=(2,))
+            self._verify_fn = jax.jit(self.model.decode_step,
+                                      donate_argnums=(2,))
+            self._accept_fn = jax.jit(
+                SPD.make_accept_fn(self.sampler, spec.k))
         self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
         self.waiting: List[Request] = []
         self._tables_dirty = False
         self.finished: List[Request] = []
         self.peak_live_tokens = 0
         self.n_steps = 0
+        self.spec_rounds = 0
+        self.spec_request_rounds = 0
+        self.drafted = 0
+        self.drafts_accepted = 0
+        self.spec_emitted = 0
+
+    def _make_decode_step(self):
+        """The jit'd plain decode step: model step + per-request sampling
+        (greedy configs reduce to the argmax this engine always ran)."""
+        model, scfg = self.model, self.sampler
+
+        def step(params, batch, caches, rids):
+            logits, caches = model.decode_step(params, batch, caches)
+            tok = SMP.sample_tokens(logits[:, -1], rids,
+                                    batch["index"] + 1, scfg)
+            return tok, caches
+
+        return step
+
+    @property
+    def _spec_k(self) -> int:
+        return self.spec.k if self.spec is not None else 0
 
     # -- cache plumbing ----------------------------------------------------
 
@@ -247,14 +317,24 @@ class Engine:
 
     # -- lifecycle ---------------------------------------------------------
 
+    def _pages_needed(self, req: Request) -> int:
+        """Pages a request may touch over its lifetime.  Spec mode adds
+        the draft window: a round writes query rows up to pos + k, so
+        the reservation prices prompt + max_new + k rows (admission
+        accounts the speculation overhead up front — the no-OOM-
+        mid-decode invariant is a reservation, never a hope)."""
+        rows = req.n_prompt + req.max_new + self._spec_k
+        return -(-rows // self.ecfg.page_size)
+
     def submit(self, req: Request):
         e = self.ecfg
-        total = req.n_prompt + req.max_new
+        total = req.n_prompt + req.max_new + self._spec_k
         if total > e.s_max:
-            raise ValueError(f"request {req.rid}: {total} tokens exceed "
-                             f"S_max = {e.s_max} "
+            raise ValueError(f"request {req.rid}: {total} tokens "
+                             f"(incl. the {self._spec_k}-token draft "
+                             f"window) exceed S_max = {e.s_max} "
                              "(raise max_pages_per_req or page_size)")
-        if -(-total // e.page_size) > self.alloc.capacity - 1:
+        if self._pages_needed(req) > self.alloc.capacity - 1:
             raise ValueError(f"request {req.rid} can never fit the pool")
         req.state = WAITING
         self.waiting.append(req)
@@ -264,11 +344,19 @@ class Engine:
             if self.slots[slot] is not None or not self.waiting:
                 continue
             req = self.waiting[0]
-            n_pages = -(-(req.n_prompt + req.max_new) // self.ecfg.page_size)
+            n_pages = self._pages_needed(req)
             if not self.alloc.can_alloc(n_pages):
                 break                      # FIFO: don't starve the head
             self.waiting.pop(0)
-            req.pages = self.alloc.alloc(n_pages)
+            if self.spec is not None:
+                # lazy commit: reserve the lifetime worst case, pop only
+                # the prompt's pages now; rounds commit/roll back the rest
+                self.alloc.reserve(n_pages)
+                n0 = -(-req.n_prompt // self.ecfg.page_size)
+                req.pages = self.alloc.alloc(n0, reserved=True)
+                req.reserved_left = n_pages - n0
+            else:
+                req.pages = self.alloc.alloc(n_pages)
             req.slot, req.state, req.t_admit = slot, PREFILL, now
             self.slots[slot] = req
             # the table row stays scratch until prefill lands: a PREFILL
@@ -277,11 +365,49 @@ class Engine:
     def _finish(self, req: Request, now: float):
         self.alloc.free(req.pages)
         req.pages = []
+        if req.reserved_left:
+            self.alloc.unreserve(req.reserved_left)
+            req.reserved_left = 0
         self._table[req.slot] = KV.SCRATCH_PAGE
         self.slots[req.slot] = None
         req.slot = -1
         req.state, req.t_finish = FINISHED, now
         self.finished.append(req)
+        self._tables_dirty = True
+
+    def _commit_pages(self, req: Request, n_rows: int) -> bool:
+        """Commit pages out of the request's reservation until its block
+        table covers `n_rows` timeline rows.  Returns True when the host
+        table changed (caller syncs before the next device step)."""
+        need = -(-n_rows // self.ecfg.page_size) - len(req.pages)
+        if need <= 0:
+            return False
+        if need > req.reserved_left:
+            raise RuntimeError(
+                f"request {req.rid}: {n_rows} rows need {need} more pages "
+                f"but only {req.reserved_left} are reserved (reservation "
+                "accounting bug)")
+        for pid in self.alloc.alloc(need, reserved=True):
+            self._table[req.slot, len(req.pages)] = pid
+            req.pages.append(pid)
+        req.reserved_left -= need
+        return True
+
+    def _rollback(self, req: Request, n_rows: int):
+        """Free committed pages past the accepted timeline (`n_rows`
+        valid rows) back into the request's reservation and point the
+        truncated block-table tail at scratch.  Pages holding only
+        rejected-draft rows return here; pages the accepted timeline
+        still touches are kept (stale rows inside them are masked by
+        position and overwritten by the next round's writes)."""
+        keep = -(-n_rows // self.ecfg.page_size)
+        drop = req.pages[keep:]
+        if not drop:
+            return
+        self.alloc.free(drop, to_reserved=True)
+        req.reserved_left += len(drop)
+        req.pages = req.pages[:keep]
+        self._table[req.slot, keep:] = KV.SCRATCH_PAGE
         self._tables_dirty = True
 
     def _prefill_step(self, req: Request, now: float) -> int:
@@ -299,27 +425,40 @@ class Engine:
             self._scatter_staging_to_pages(req)
             self._table[req.slot, :len(req.pages)] = req.pages
             self._tables_dirty = True
-            first = int(jnp.argmax(logits[0, n - 1]))
+            # the first generated token sits at timeline index n_prompt;
+            # greedy configs reduce to the original argmax bit-for-bit
+            first = int(SMP.sample_tokens(
+                logits[:, n - 1], jnp.asarray([req.rid], jnp.int32),
+                jnp.asarray([req.n_prompt], jnp.int32), self.sampler)[0])
             req.out_tokens.append(first)
             req.pos = req.n_prompt
             req.state, req.t_first = DECODE, now
             self._maybe_finish(req, first, now)
         return n
 
-    def _decode_batch(self, now: float) -> int:
-        """One batched decode step over every DECODE-state slot."""
+    def _live_batch(self):
+        """(live requests, tokens (B,1), positions (B,), rids (B,)) for
+        one fixed-shape step; idle slots ride along pointing at scratch."""
         e = self.ecfg
         live = [r for r in self.slots if r is not None and r.state == DECODE]
-        if not live:
-            return 0
         tokens = np.zeros((e.max_batch, 1), np.int32)
         positions = np.zeros((e.max_batch,), np.int32)
+        rids = np.zeros((e.max_batch,), np.int32)
         for r in live:
             tokens[r.slot, 0] = r.out_tokens[-1]
             positions[r.slot] = r.pos
+            rids[r.slot] = r.rid
+        return live, tokens, positions, rids
+
+    def _decode_batch(self, now: float) -> int:
+        """One batched decode step over every DECODE-state slot."""
+        live, tokens, positions, rids = self._live_batch()
+        if not live:
+            return 0
         nxt, self.caches = self._decode_fn(
             self.params, {"tokens": jnp.asarray(tokens),
-                          "index": jnp.asarray(positions)}, self.caches)
+                          "index": jnp.asarray(positions)}, self.caches,
+            jnp.asarray(rids))
         nxt = np.asarray(nxt)
         for r in live:
             tok = int(nxt[r.slot])
@@ -327,6 +466,63 @@ class Engine:
             r.out_tokens.append(tok)
             self._maybe_finish(r, tok, now)
         return len(live)
+
+    def _spec_decode_batch(self, now: float) -> int:
+        """One speculative round over every DECODE-state slot: k draft
+        steps under the draft policy, one k+1-token verify pass under
+        the serving policy, rejection-sampled acceptance, then paged-KV
+        rollback of pages holding only rejected rows.  Returns the
+        token-budget cost: the round really runs 2k+1 model tokens per
+        live request (k draft + k+1 verify)."""
+        e, k = self.ecfg, self.spec.k
+        live, tokens, positions, rids = self._live_batch()
+        if not live:
+            return 0
+        # commit pages for the draft window (rows pos .. pos+k) and push
+        # the grown tables to the device before anything reads them
+        dirty = [self._commit_pages(r, r.pos + k + 1) for r in live]
+        if any(dirty) or self._tables_dirty:
+            self._sync_tables()
+            self._tables_dirty = False
+        toks = jnp.asarray(tokens)
+        pos = jnp.asarray(positions)
+        rid_arr = jnp.asarray(rids)
+        cur, drafts, draft_probs = toks, [], []
+        for i in range(k):
+            d, q, self.caches = self._draft_fn(
+                self.params, {"tokens": cur, "index": pos + i},
+                self.caches, rid_arr)
+            drafts.append(d)
+            draft_probs.append(q)
+            cur = d[:, None]
+        drafts = jnp.stack(drafts, axis=1)                   # (B, k)
+        logits, self.caches = self._verify_fn(
+            self.params, {"tokens": jnp.concatenate([toks, drafts], axis=1),
+                          "index": pos}, self.caches)
+        emitted, acc = self._accept_fn(
+            drafts, None if self.sampler.greedy
+            else jnp.stack(draft_probs, axis=1), logits, rid_arr, pos)
+        emitted, acc = np.asarray(emitted), np.asarray(acc)
+        self.spec_rounds += 1
+        self.spec_request_rounds += len(live)
+        for r in live:
+            a = int(acc[r.slot])
+            self.drafted += k
+            self.drafts_accepted += a
+            emit = [int(emitted[r.slot, j])
+                    for j in range(min(a + 1, r.max_new - r.n_generated))]
+            for j, tok in enumerate(emit):
+                if tok == e.eos_id:
+                    emit = emit[:j + 1]
+                    break
+            r.out_tokens.extend(emit)
+            r.pos += len(emit)
+            self.spec_emitted += len(emit)
+            if r.n_generated >= r.max_new or emit[-1] == e.eos_id:
+                self._finish(r, now)
+            else:
+                self._rollback(r, r.pos)
+        return len(live) * (2 * k + 1)
 
     def _maybe_finish(self, req: Request, tok: int, now: float):
         if req.n_generated >= req.max_new or tok == self.ecfg.eos_id:
@@ -337,7 +533,8 @@ class Engine:
         leftover token budget on prefill chunks."""
         self._admit(now)
         budget = self.ecfg.token_budget
-        budget -= self._decode_batch(now)
+        budget -= (self._spec_decode_batch(now) if self.spec is not None
+                   else self._decode_batch(now))
         while budget > 0:
             pre = [r for r in self.slots
                    if r is not None and r.state == PREFILL]
@@ -374,6 +571,11 @@ class Engine:
         self.finished = []
         self.peak_live_tokens = 0
         self.n_steps = 0
+        self.spec_rounds = 0
+        self.spec_request_rounds = 0
+        self.drafted = 0
+        self.drafts_accepted = 0
+        self.spec_emitted = 0
         self.alloc.peak_in_use = self.alloc.in_use
 
     def run(self, requests: List[Request]) -> dict:
@@ -431,7 +633,7 @@ class Engine:
         ttft = np.array([r.t_first - r.arrival for r in self.finished])
         gen = sum(r.n_generated for r in self.finished)
         kv = self.kv_bytes_report()
-        return {
+        rep = {
             "n_requests": len(self.finished),
             "wall_s": wall,
             "steps": self.n_steps,
@@ -443,8 +645,35 @@ class Engine:
             "decode_route": self.plan["route"],
             "decode_backend": self.plan["backend"],
             "decode_bytes_per_step_layer": self.plan["bytes_moved"],
+            "temperature": self.sampler.temperature,
             **kv,
         }
+        if self.spec is not None:
+            # re-describe like the decode plan above: the report states
+            # which kernel drafted and which verified
+            self.draft_plan = exec_plan.describe(
+                "paged_decode", self.draft_pol, **self._plan_ctx)
+            self.verify_plan = exec_plan.describe(
+                "verify_attn", self.pol, sq=self.spec.k + 1,
+                **self._plan_ctx)
+            rep.update({
+                "spec_draft_policy": self.spec.draft_policy,
+                "spec_k": self.spec.k,
+                "spec_rounds": self.spec_rounds,
+                "acceptance_rate": (self.drafts_accepted / self.drafted
+                                    if self.drafted else 0.0),
+                # tokens one request advances per round it participates
+                # in — the speculative speedup knob, in [1, k+1]
+                "eff_tokens_per_round": (self.spec_emitted
+                                         / self.spec_request_rounds
+                                         if self.spec_request_rounds
+                                         else 0.0),
+                "draft_route": self.draft_plan["route"],
+                "draft_backend": self.draft_plan["backend"],
+                "verify_route": self.verify_plan["route"],
+                "verify_backend": self.verify_plan["backend"],
+            })
+        return rep
 
 
 def format_report(rep: dict, policy: str) -> str:
@@ -469,4 +698,12 @@ def format_report(rep: dict, policy: str) -> str:
         f"plan: decode via {rep['decode_route']} "
         f"[{rep['decode_backend']}], "
         f"{rep['decode_bytes_per_step_layer'] / 1e3:.1f} KB KV moved "
-        "per step/layer")
+        "per step/layer"
+        + (f"\nspec: draft k={rep['spec_k']} under "
+           f"{rep['spec_draft_policy']} via {rep['draft_route']} "
+           f"[{rep['draft_backend']}], verify via {rep['verify_route']} "
+           f"[{rep['verify_backend']}]; acceptance "
+           f"{rep['acceptance_rate']:.0%}, "
+           f"{rep['eff_tokens_per_round']:.2f} tokens/round over "
+           f"{rep['spec_rounds']} rounds"
+           if "spec_k" in rep else ""))

@@ -232,6 +232,7 @@ def plan_routes(policy, shapes=None):
         "flash_attn": {"sq": 128, "skv": 128, "use_flash": True},
         "decode_attn": {"s_ctx": 128},
         "paged_decode": {"page_size": 16, "max_pages": 8},
+        "verify_attn": {"page_size": 16, "max_pages": 8, "sq": 4},
     }
     for op, over in (shapes or {}).items():
         ctx.setdefault(op, {}).update(over)

@@ -101,21 +101,31 @@ def generate(model, params, prompt, n_gen: int, s_ctx: int):
 
 def run_engine(cfg, model, args):
     """--engine mode: continuous batching over the paged quantized cache,
-    driven by an open-loop synthetic workload."""
-    from repro.launch.engine import (Engine, EngineConfig, format_report,
+    driven by an open-loop synthetic workload.  --spec-draft turns on
+    self-speculative decoding (draft under the named low-precision
+    policy, verify under --policy); --temperature/--top-k/--top-p select
+    sampling (default greedy)."""
+    from repro.launch.engine import (Engine, EngineConfig, SamplerConfig,
+                                     SpecConfig, format_report,
                                      synthetic_workload)
     ecfg = EngineConfig(page_size=args.page_size, n_pages=args.pages,
                         max_batch=args.max_batch or args.batch,
                         max_pages_per_req=args.max_pages_per_req,
                         token_budget=args.token_budget,
                         prefill_chunk=args.prefill_chunk)
-    if args.prompt_len + args.gen > ecfg.s_max:
+    spec = SpecConfig(args.spec_draft, args.spec_k) if args.spec_draft \
+        else None
+    spec_k = args.spec_k if spec else 0
+    if args.prompt_len + args.gen + spec_k > ecfg.s_max:
         raise SystemExit(
-            f"--prompt-len {args.prompt_len} + --gen {args.gen} exceeds the "
-            f"engine's S_max = {ecfg.s_max} tokens/request; raise "
-            "--max-pages-per-req or --page-size")
+            f"--prompt-len {args.prompt_len} + --gen {args.gen} (+ the "
+            f"{spec_k}-token draft window) exceeds the engine's S_max = "
+            f"{ecfg.s_max} tokens/request; raise --max-pages-per-req or "
+            "--page-size")
+    sampler = SamplerConfig(temperature=args.temperature, top_k=args.top_k,
+                            top_p=args.top_p, seed=args.seed)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, ecfg)
+    engine = Engine(model, params, ecfg, sampler=sampler, spec=spec)
     reqs = synthetic_workload(
         args.requests, vocab=cfg.vocab_size, seed=args.seed,
         rate=args.rate, prompt_range=(max(1, args.prompt_len // 2),
@@ -153,7 +163,20 @@ def main(argv=None):
     eg.add_argument("--requests", type=int, default=16)
     eg.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate, req/s (0 = all at t=0)")
-    eg.add_argument("--seed", type=int, default=0)
+    eg.add_argument("--seed", type=int, default=0,
+                    help="workload + sampler RNG seed")
+    sg = ap.add_argument_group("sampling + speculation", "engine mode")
+    sg.add_argument("--temperature", type=float, default=0.0,
+                    help="sampling temperature (0 = greedy argmax)")
+    sg.add_argument("--top-k", type=int, default=0,
+                    help="keep the k largest logits (0 = off)")
+    sg.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = off)")
+    sg.add_argument("--spec-draft", default="",
+                    help="draft policy preset for self-speculative "
+                         "decoding (e.g. w4a4_kv4_attn4; empty = off)")
+    sg.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens per speculative round")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

@@ -184,6 +184,55 @@ def dpa_paged_decode_attn(q, cache, positions, *, fmt: str, fmt_kv: str,
                          kv_on_grid=True)
 
 
+def dpa_paged_verify_attn(q, cache, positions, *, fmt: str, fmt_kv: str,
+                          kv_packed: bool, scale):
+    """Speculative-verify attention: S_q causal query tokens per request
+    against the *paged* quantized KV cache.
+
+    q: (B, S_q, H, hd) — a request's last accepted token followed by its
+    draft tokens, already rope'd at per-request positions; cache: paged
+    `repro.core.kvcache` pytree whose pools already hold the query rows
+    (written by `paged_write_tokens`); positions: (B,) i32 — the absolute
+    timeline index of query row 0.  Same contract as
+    `dpa_paged_decode_attn`, generalized to S_q > 1 with a per-request
+    *causal* mask: query row i of request b attends key slots <=
+    positions[b] + i — exactly the chunked-prefill masking, applied to
+    the block-table view — and row i reproduces BIT-FOR-BIT what a
+    single-token decode step at position positions[b] + i would compute.
+    That bit-identity is what makes greedy speculative decoding exact
+    (`serving.spec_decode`): the verify pass's attention outputs ARE the
+    plain decode path's.
+
+    The exactness is engineered, not assumed: the (B, S_q) query axis
+    folds into the batch axis, so every einsum in `dpa_attention` sees
+    exactly the S_q == 1 decode shapes and XLA lowers the identical
+    per-element reduction (an (S_q, S_kv) logits matmul would pick a
+    different gemm tiling and drift by ulps — enough to flip a greedy
+    argmax on near-tied logits).  The price is the gathered view
+    repeated per query row, S_q x the decode step's HBM traffic — the
+    verify pass amortizes it over k+1 scored tokens
+    (`tests/test_spec_decode.py::test_verify_attn_matches_stepped_
+    paged_decode` pins the bit-identity)."""
+    from repro.core.kvcache import dequantize_kv, gather_paged_kv
+    B, sq, H, hd = q.shape
+    view = gather_paged_kv(cache)
+    k = dequantize_kv(view["k_codes"], view["k_scale"], fmt=fmt_kv,
+                      packed=kv_packed)
+    v = dequantize_kv(view["v_codes"], view["v_scale"], fmt=fmt_kv,
+                      packed=kv_packed)
+    s_view = k.shape[1]
+    pos = jnp.asarray(positions, jnp.int32)[:, None] \
+        + jnp.arange(sq, dtype=jnp.int32)[None]             # (B, S_q)
+    pos_r = pos.reshape(B * sq)
+    valid = jnp.arange(s_view)[None, :] <= pos_r[:, None]   # (B*S_q, S_view)
+    mask = valid[:, None, None, :]
+    out = dpa_attention(q.reshape(B * sq, 1, H, hd),
+                        jnp.repeat(k, sq, axis=0),
+                        jnp.repeat(v, sq, axis=0), mask, fmt=fmt,
+                        scale=scale, kv_on_grid=True)
+    return out.reshape(B, sq, H, hd)
+
+
 def _local_update(cache, new, offset, axis_name):
     """Write `new` (B,1,KV,hd) at global position `offset` into this
     device's sequence shard of `cache` (B, S_loc, KV, hd)."""

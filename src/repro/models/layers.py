@@ -198,21 +198,25 @@ def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
     if cache is not None and cross_kv is None and "block_table" in cache:
         # paged quantized KV cache (the continuous-batching engine's
         # layout): `offset` is a (B,) vector of per-request positions.
-        # The new token quantizes into its request's page, attention
-        # reads codes through the block table — same prologue-dequant
-        # contract as the contiguous branch below, bit-identical values
-        if Sq != 1:
-            raise ValueError("paged KV caches serve the decode step only "
-                             "(Sq == 1); prefill runs against a "
-                             "contiguous staging cache — see launch.engine")
-        new_cache = KV.paged_write_token(cache, k, v, offset,
-                                         fmt=policy.fmt_kv,
-                                         packed=policy.kv_packed)
-        entry = exec_plan.resolve(
-            "paged_decode", policy, batch=B,
-            page_size=cache["k_codes"].shape[1],
-            max_pages=cache["block_table"].shape[1],
-            kv_heads=cfg.n_kv_heads, hd=hd)
+        # New tokens quantize into the request's pages, attention reads
+        # codes through the block table — same prologue-dequant contract
+        # as the contiguous branch below, bit-identical values.  Sq == 1
+        # is the decode step; Sq > 1 is the speculative verify window
+        # (the request's last accepted token + its draft tokens), scored
+        # with per-request causal masks via the ``verify_attn`` route —
+        # prefill still runs against a contiguous staging cache, see
+        # launch.engine
+        new_cache = KV.paged_write_tokens(cache, k, v, offset,
+                                          fmt=policy.fmt_kv,
+                                          packed=policy.kv_packed)
+        plan_ctx = dict(batch=B, page_size=cache["k_codes"].shape[1],
+                        max_pages=cache["block_table"].shape[1],
+                        kv_heads=cfg.n_kv_heads, hd=hd)
+        if Sq == 1:
+            entry = exec_plan.resolve("paged_decode", policy, **plan_ctx)
+        else:
+            entry = exec_plan.resolve("verify_attn", policy, sq=Sq,
+                                      **plan_ctx)
         y = entry.run(q, new_cache, offset, policy=policy, scale=hd ** -0.5)
         y = maybe_shard(y.reshape(B, Sq, cfg.n_heads * hd),
                         "data", None, "model")

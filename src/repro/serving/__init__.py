@@ -1,0 +1,9 @@
+"""Serving-side subsystems: sampling + self-speculative decoding.
+
+`sampler` is the fixed-shape, jit-able token sampler (temperature /
+top-k / top-p) with per-request threefry keys, `spec_decode` the
+draft-low-precision / verify-high-precision speculative decoder the
+continuous-batching engine (`repro.launch.engine`) mounts on top of it.
+"""
+from .sampler import SamplerConfig           # noqa: F401
+from .spec_decode import SpecConfig          # noqa: F401

@@ -1,0 +1,149 @@
+"""Fixed-shape, jit-able token sampling with per-request PRNG streams.
+
+The batched serving engine samples every live request in one fused call,
+but a request's tokens must not depend on *which other requests* share
+its batch — otherwise continuous batching changes outputs run to run.
+The fix is to derive randomness per request, never per batch: the stream
+for one sampled token is
+
+    fold_in(fold_in(fold_in(PRNGKey(seed), rid), position), role)
+
+keyed on the request id and the token's absolute timeline index, so the
+same request produces identical tokens whether it is served alone or
+packed into any batch composition (`tests/test_sampler.py` pins this).
+`role` separates the independent uses speculative decoding makes of one
+position (proposal draw, accept/reject uniform, residual draw).
+
+Every transform is fixed-shape over the full vocab (sort + threshold,
+no dynamic gathers), so the whole sampler jits into the engine's decode
+step.  ``temperature == 0`` short-circuits to raw-logits argmax —
+bit-identical to the greedy path the engine shipped with, which is the
+anchor for the speculative-decoding exactness story."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+# role salts: independent streams at one (rid, position)
+ROLE_SAMPLE = 0      # plain decode sampling
+ROLE_DRAFT = 1       # speculative proposal draw
+ROLE_ACCEPT = 2      # accept/reject uniform
+ROLE_RESIDUAL = 3    # residual / bonus draw after the accept decision
+
+_NEG = -jnp.inf
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """Sampling knobs, all static under jit.
+
+    temperature 0 means greedy (argmax over raw logits, bit-for-bit the
+    pre-sampler engine behavior); top_k 0 and top_p 1.0 disable those
+    filters.  `seed` roots every request's threefry stream."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError("temperature must be >= 0")
+        if self.top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 disables)")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0
+
+
+def request_key(seed: int, rid, position, role: int):
+    """The per-token threefry key: (seed, rid, position, role) folds.
+
+    `rid`/`position` may be traced i32 scalars — fold_in is jit-safe —
+    so one vmap turns this into the engine's per-slot key batch."""
+    key = jax.random.PRNGKey(seed)
+    key = jax.random.fold_in(key, rid)
+    key = jax.random.fold_in(key, position)
+    return jax.random.fold_in(key, role)
+
+
+def greedy_tokens(logits):
+    """Argmax with NaN logits masked (..., V) -> (...) i32.
+
+    Bit-identical to raw ``jnp.argmax`` whenever logits are NaN-free —
+    which is the greedy anchor the engine equality tests pin — while an
+    all-but-one-masked row with NaN entries still picks the finite
+    token.  The speculative accept rule uses this same reduction, so
+    draft/verify argmax comparisons and plain decode can never disagree
+    on how ties against NaN resolve."""
+    x = jnp.where(jnp.isnan(logits), _NEG, logits)
+    return jnp.argmax(x, axis=-1).astype(jnp.int32)
+
+
+def filter_logits(logits, cfg: SamplerConfig):
+    """Raw logits (..., V) -> f32 filtered/scaled logits.
+
+    NaN entries are treated as masked (-inf) up front, then temperature
+    scaling, then top-k (keep the k largest; ties at the k-th value are
+    all kept — deterministic), then top-p over the *remaining* mass:
+    sort descending, keep tokens while the mass strictly before them is
+    < p.  When p lands exactly on a cumulative step, exactly that prefix
+    survives (the boundary token whose prefix mass equals p is cut).
+    At least one token always survives every filter."""
+    x = logits.astype(jnp.float32)
+    x = jnp.where(jnp.isnan(x), _NEG, x)
+    if cfg.temperature > 0:
+        x = x / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jnp.sort(x, axis=-1)[..., -cfg.top_k, None]
+        x = jnp.where(x < kth, _NEG, x)
+    if cfg.top_p < 1.0:
+        p = jax.nn.softmax(x, axis=-1)
+        sp = jnp.flip(jnp.sort(p, axis=-1), axis=-1)
+        mass_before = jnp.cumsum(sp, axis=-1) - sp
+        keep = mass_before < cfg.top_p
+        # threshold = smallest kept probability (>= 1 token always kept:
+        # mass_before of the largest is 0 < p)
+        thr = jnp.min(jnp.where(keep, sp, jnp.inf), axis=-1, keepdims=True)
+        x = jnp.where(p < thr, _NEG, x)
+    return x
+
+
+def sample_probs(logits, cfg: SamplerConfig):
+    """The actual sampling distribution: softmax of the filtered logits
+    (zeros at masked slots).  This is the q / p that speculative
+    rejection sampling compares, so it must match `sample_tokens`'s
+    categorical draw exactly — both go through `filter_logits`."""
+    return jax.nn.softmax(filter_logits(logits, cfg), axis=-1)
+
+
+def sample_tokens(logits, rids, positions, cfg: SamplerConfig,
+                  role: int = ROLE_SAMPLE):
+    """Batched per-request draw: logits (B, V), rids/positions (B,) i32
+    -> (B,) i32 tokens.  Greedy configs take the argmax (no PRNG
+    consumed); otherwise one categorical per row under its request key."""
+    if cfg.greedy:
+        return greedy_tokens(logits)
+    keys = jax.vmap(
+        lambda r, p: request_key(cfg.seed, r, p, role))(rids, positions)
+    x = filter_logits(logits, cfg)
+    return jax.vmap(jax.random.categorical)(keys, x).astype(jnp.int32)
+
+
+def accept_uniforms(rids, positions, cfg: SamplerConfig):
+    """(B,) accept/reject uniforms in [0, 1), one per request stream."""
+    keys = jax.vmap(
+        lambda r, p: request_key(cfg.seed, r, p, ROLE_ACCEPT))(
+            rids, positions)
+    return jax.vmap(lambda k: jax.random.uniform(k, ()))(keys)
+
+
+def categorical_from_probs(probs, keys):
+    """(B, V) probs + (B,) keys -> (B,) i32 draws (log-space categorical;
+    zero-prob slots are exactly excluded)."""
+    logp = jnp.where(probs > 0, jnp.log(jnp.maximum(probs, 1e-38)), _NEG)
+    return jax.vmap(jax.random.categorical)(keys, logp).astype(jnp.int32)

@@ -1,0 +1,170 @@
+"""Trans-precision self-speculative decoding: draft cheap, verify exact.
+
+TransDot's premise is one datapath serving fp16/fp8/fp4 DPA at
+2x/4x/8x throughput; speculative decoding is the serving-level mirror
+of that trade.  The *same weights* run twice per round:
+
+  draft  : k sequential single-token decode steps under a cheap
+           low-precision policy (e.g. `w4a4_kv4_attn4`, the all-fp4
+           8-term-DPA route), each proposing the next token;
+  verify : ONE batched pass under the serving policy over k+1 query
+           tokens (the last accepted token + all k drafts) through the
+           ``verify_attn`` exec-plan route — per-request causal masks
+           over the paged cache, so row i reproduces bit-for-bit what a
+           plain decode step at that position would compute;
+  accept : standard speculative rejection sampling per request, so the
+           emitted distribution is *exactly* the serving policy's.
+           Greedy (temperature 0) degenerates to prefix-match on
+           argmax, making spec-decoded outputs token-for-token
+           identical to the non-speculative engine — the pinned
+           invariant (`tests/test_spec_decode.py`).
+
+Both policies must share the KV-cache storage format (fmt_kv /
+kv_packed): draft and verify write the same page pool, and the verify
+pass *overwrites* every row the draft phase touched with serving-policy
+codes, so accepted rows are indistinguishable from plain-decode rows.
+Rows past the accepted length hold rejected-draft values — masked by
+position, overwritten on the next round, and their wholly-unused pages
+roll back to the request's reservation (`core.kvcache.PageAllocator`).
+
+This module owns the jit-able pieces (draft step, accept rule); the
+scheduler side — page commit/rollback, token budgeting, stats — lives
+in `launch.engine`.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import get_policy
+
+from . import sampler as S
+from .sampler import SamplerConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculation knobs.  `draft_policy` names the low-precision policy
+    preset the draft steps run under; `k` is the fixed draft length per
+    round (fixed-shape: every round drafts exactly k and verifies k+1,
+    so both jitted steps compile once)."""
+    draft_policy: str
+    k: int = 4
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError("spec k must be >= 1")
+
+
+def validate_policy_pair(draft_policy, serve_policy):
+    """Draft and serving policies must share one cache layout.
+
+    Returns the draft policy object.  The cache stores fmt_kv-width
+    codes; a draft policy with a different fmt_kv (or packing) would
+    write rows the verify pass cannot even type-check against."""
+    dpol, spol = get_policy(draft_policy), get_policy(serve_policy)
+    if not dpol.kv_quantized:
+        raise ValueError(
+            f"draft policy {draft_policy!r} keeps a raw f32 cache; "
+            "speculative drafting shares the serving engine's paged "
+            "code pool, so pick a draft preset with fmt_kv set "
+            "(e.g. w4a4_kv4_attn4 over an fp4 cache)")
+    if (dpol.fmt_kv, dpol.kv_packed) != (spol.fmt_kv, spol.kv_packed):
+        raise ValueError(
+            f"draft policy {draft_policy!r} stores KV as "
+            f"{dpol.fmt_kv}/packed={dpol.kv_packed} but the serving "
+            f"policy stores {spol.fmt_kv}/packed={spol.kv_packed}; "
+            "draft and verify must share the cache format (pick a "
+            "draft preset with the same fmt_kv/kv_packed)")
+    return dpol
+
+
+def make_draft_step(draft_model, scfg: SamplerConfig):
+    """One draft decode step: (params, batch, caches, rids) ->
+    (token (B,), draft_probs (B, V) | None, caches).
+
+    `batch` is the engine's decode batch ({"tokens": (B, 1), "index":
+    (B,) positions}); the proposed token's timeline index is index + 1,
+    which keys its PRNG stream (`ROLE_DRAFT`).  Greedy configs return no
+    probs — acceptance is argmax prefix-match and needs none."""
+    greedy = scfg.greedy
+
+    def step(params, batch, caches, rids):
+        logits, caches = draft_model.decode_step(params, batch, caches)
+        tok = S.sample_tokens(logits[:, -1], rids, batch["index"] + 1,
+                              scfg, role=S.ROLE_DRAFT)
+        probs = None if greedy else S.sample_probs(logits[:, -1], scfg)
+        return tok, probs, caches
+
+    return step
+
+
+def make_accept_fn(scfg: SamplerConfig, k: int):
+    """The accept rule: (drafts, draft_probs, target_logits, rids,
+    positions) -> (emitted (B, k+1), n_accepted (B,)).
+
+    drafts (B, k) are the proposals for timeline indices positions+1 ..
+    positions+k; target_logits (B, k+1, V) are the verify pass's logits,
+    row i the serving-policy distribution for index positions+i+1.
+    `emitted[:, j]` holds the j-th token the round produces; exactly
+    n_accepted+1 of them are valid (accepted drafts, then one correction
+    / residual / bonus token), the rest are zero padding.
+
+    Greedy: accept the longest prefix where draft == argmax(target),
+    then emit the target argmax at the first mismatch (or the bonus
+    argmax after k accepts) — deterministic, no PRNG.
+
+    Sampled: per-draft accept with prob min(1, p(d)/q(d)) under the
+    request's `ROLE_ACCEPT` uniform; on rejection sample the residual
+    max(p - q, 0)/Z, on full acceptance sample the bonus from p_k —
+    both via `ROLE_RESIDUAL` — so the output distribution is exactly
+    the target's (standard speculative-sampling correctness)."""
+    idx = jnp.arange(k + 1)[None]
+
+    def emit(drafts, acc, extra):
+        drafts_p = jnp.pad(drafts, ((0, 0), (0, 1)))
+        return jnp.where(idx < acc[:, None], drafts_p,
+                         jnp.where(idx == acc[:, None], extra, 0)
+                         ).astype(jnp.int32)
+
+    if scfg.greedy:
+        def accept(drafts, draft_probs, target_logits, rids, positions):
+            t = S.greedy_tokens(target_logits)
+            match = (drafts == t[:, :k]).astype(jnp.int32)
+            acc = jnp.sum(jnp.cumprod(match, axis=1), axis=1)
+            corr = jnp.take_along_axis(t, acc[:, None], axis=1)
+            return emit(drafts, acc, corr), acc
+
+        return accept
+
+    def accept(drafts, draft_probs, target_logits, rids, positions):
+        p = S.sample_probs(target_logits, scfg)              # (B, k+1, V)
+        tok_pos = positions[:, None] + 1 + jnp.arange(k)[None]
+        u = jax.vmap(lambda col: S.accept_uniforms(rids, col, scfg),
+                     in_axes=1, out_axes=1)(tok_pos)         # (B, k)
+        p_d = jnp.take_along_axis(p[:, :k], drafts[..., None],
+                                  axis=-1)[..., 0]
+        q_d = jnp.take_along_axis(draft_probs, drafts[..., None],
+                                  axis=-1)[..., 0]
+        ok = (u < jnp.minimum(p_d / jnp.maximum(q_d, 1e-38), 1.0)
+              ).astype(jnp.int32)
+        acc = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)       # (B,)
+        # the (acc)-th emitted token: residual max(p-q,0)/Z at the first
+        # rejection; after k accepts q_at == p_at, the residual vanishes
+        # and the draw falls through to the bonus target distribution
+        at = acc[:, None, None]
+        p_at = jnp.take_along_axis(p, at, axis=1)[:, 0]      # (B, V)
+        q_pad = jnp.concatenate([draft_probs, p[:, k:]], axis=1)
+        q_at = jnp.take_along_axis(q_pad, at, axis=1)[:, 0]
+        resid = jnp.maximum(p_at - q_at, 0.0)
+        z = jnp.sum(resid, axis=-1, keepdims=True)
+        dist = jnp.where(z > 0, resid / jnp.maximum(z, 1e-38), p_at)
+        keys = jax.vmap(lambda r, pos: S.request_key(
+            scfg.seed, r, pos, S.ROLE_RESIDUAL))(
+                rids, positions + 1 + acc)
+        extra = S.categorical_from_probs(dist, keys)
+        return emit(drafts, acc, extra[:, None]), acc
+
+    return accept

@@ -88,6 +88,34 @@ def test_paged_token_writes_bit_identical(fmt, packed):
 
 
 @pytest.mark.parametrize("fmt,packed", KV_FORMATS, ids=map(_fmt_id, KV_FORMATS))
+def test_multi_token_write_equals_stepped_writes(fmt, packed):
+    """`paged_write_tokens` over an S_new window == S_new sequential
+    `paged_write_token` calls, bit for bit — rows quantize independently
+    (per-row absmax over head_dim), so the speculative draft/verify
+    window writes exactly what stepped decode would have written, even
+    when the window straddles a page boundary."""
+    B, n_kv, hd, max_pages, s_new = len(LENGTHS), 2, 16, 4, 5
+    starts = [L - 2 for L in LENGTHS]           # windows cross boundaries
+    k, v = _raw_kv(4, B, s_new, n_kv, hd)
+    _, table, _ = _alloc_tables([L + s_new for L in LENGTHS], max_pages,
+                                capacity=16)
+    base = dict(KV.init_paged_kv_cache(16, PS, n_kv, hd, fmt=fmt,
+                                       packed=packed),
+                block_table=jnp.asarray(table))
+    multi = KV.paged_write_tokens(base, k, v, jnp.asarray(starts, jnp.int32),
+                                  fmt=fmt, packed=packed)
+    stepped = base
+    for t in range(s_new):
+        stepped = KV.paged_write_token(
+            stepped, k[:, t:t + 1], v[:, t:t + 1],
+            jnp.asarray([s + t for s in starts], jnp.int32),
+            fmt=fmt, packed=packed)
+    for key in KV.QUANT_KEYS:
+        assert np.array_equal(np.asarray(multi[key]),
+                              np.asarray(stepped[key])), key
+
+
+@pytest.mark.parametrize("fmt,packed", KV_FORMATS, ids=map(_fmt_id, KV_FORMATS))
 def test_prefill_scatter_bit_identical(fmt, packed):
     """write_prefill_rows (whole pages + partial tail) == the contiguous
     staging rows it copies."""

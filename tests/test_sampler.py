@@ -1,0 +1,178 @@
+"""Sampler conformance: batch-composition independence + edge cases.
+
+The serving sampler's two contracts:
+
+  1. Per-request determinism — a token draw depends only on (seed,
+     request id, token index, role), never on which other requests share
+     the batch, so continuous batching cannot change a request's output.
+  2. Greedy anchor — temperature 0 is raw-logits argmax bit-for-bit
+     (the speculative-decoding exactness story hangs off this).
+
+Plus the filter edge cases: top-p mass landing exactly on a cumulative
+step, top-k=1, ties at the k-th logit, and NaN/-inf masked vocabularies.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.serving import sampler as S
+from repro.serving.sampler import SamplerConfig
+
+
+def _logits(seed=0, b=4, v=64):
+    return jax.random.normal(jax.random.PRNGKey(seed), (b, v)) * 3.0
+
+
+# -----------------------------------------------------------------------------
+# per-request determinism: independent of batch composition
+# -----------------------------------------------------------------------------
+
+def test_sample_independent_of_batch_composition():
+    """Row (rid, position) draws the same token whether it sits alone,
+    first, last, or among different neighbors."""
+    cfg = SamplerConfig(temperature=0.7, top_k=16, top_p=0.95, seed=5)
+    logits = _logits(1, b=5, v=128)
+    rids = jnp.asarray([3, 9, 4, 7, 11], jnp.int32)
+    pos = jnp.asarray([2, 17, 5, 9, 1], jnp.int32)
+    full = S.sample_tokens(logits, rids, pos, cfg)
+    # alone
+    for i in range(5):
+        alone = S.sample_tokens(logits[i:i + 1], rids[i:i + 1],
+                                pos[i:i + 1], cfg)
+        assert int(alone[0]) == int(full[i]), i
+    # permuted batch
+    perm = jnp.asarray([4, 2, 0, 3, 1])
+    shuffled = S.sample_tokens(logits[perm], rids[perm], pos[perm], cfg)
+    assert np.array_equal(np.asarray(shuffled), np.asarray(full)[perm])
+
+
+def test_streams_differ_across_rid_position_role():
+    """Distinct (rid, position, role) tuples give distinct keys (a
+    sanity check that the folds all participate)."""
+    keys = {tuple(np.asarray(S.request_key(0, r, p, role)))
+            for r in range(4) for p in range(4)
+            for role in (S.ROLE_SAMPLE, S.ROLE_DRAFT, S.ROLE_ACCEPT,
+                         S.ROLE_RESIDUAL)}
+    assert len(keys) == 4 * 4 * 4
+
+
+def test_seed_changes_tokens():
+    logits = _logits(2, b=8, v=256)
+    rids = jnp.arange(8, dtype=jnp.int32)
+    pos = jnp.full((8,), 3, jnp.int32)
+    a = S.sample_tokens(logits, rids, pos, SamplerConfig(temperature=1.0,
+                                                         seed=0))
+    b = S.sample_tokens(logits, rids, pos, SamplerConfig(temperature=1.0,
+                                                         seed=1))
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+# -----------------------------------------------------------------------------
+# greedy anchor
+# -----------------------------------------------------------------------------
+
+def test_temperature_zero_is_argmax_bit_for_bit():
+    logits = _logits(3, b=6, v=300)
+    rids = jnp.arange(6, dtype=jnp.int32)
+    pos = jnp.arange(6, dtype=jnp.int32)
+    got = S.sample_tokens(logits, rids, pos, SamplerConfig())
+    want = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_tiny_temperature_peaked_logits_matches_greedy():
+    """A strongly peaked distribution at low temperature samples the
+    argmax with overwhelming probability — sanity for the t -> 0 limit."""
+    logits = jnp.zeros((4, 32)).at[:, 7].set(50.0)
+    rids = jnp.arange(4, dtype=jnp.int32)
+    pos = jnp.arange(4, dtype=jnp.int32)
+    got = S.sample_tokens(logits, rids, pos,
+                          SamplerConfig(temperature=0.1, seed=3))
+    assert np.all(np.asarray(got) == 7)
+
+
+# -----------------------------------------------------------------------------
+# filter edge cases
+# -----------------------------------------------------------------------------
+
+def test_top_k_one_keeps_only_argmax():
+    cfg = SamplerConfig(temperature=1.0, top_k=1, seed=0)
+    logits = _logits(4, b=3, v=50)
+    probs = S.sample_probs(logits, cfg)
+    am = np.asarray(jnp.argmax(logits, -1))
+    p = np.asarray(probs)
+    for i in range(3):
+        assert p[i, am[i]] == pytest.approx(1.0)
+        assert np.count_nonzero(p[i]) == 1
+    toks = S.sample_tokens(logits, jnp.arange(3, dtype=jnp.int32),
+                           jnp.arange(3, dtype=jnp.int32), cfg)
+    assert np.array_equal(np.asarray(toks), am)
+
+
+def test_top_k_ties_at_kth_value_all_kept():
+    """Ties at the k-th largest logit are all kept (deterministic mask,
+    no arbitrary index-order cut)."""
+    logits = jnp.asarray([[4.0, 3.0, 3.0, 1.0, 0.0]])
+    probs = S.sample_probs(logits, SamplerConfig(temperature=1.0, top_k=2))
+    assert np.count_nonzero(np.asarray(probs)) == 3      # 4.0 + both 3.0s
+
+
+def test_top_p_exactly_at_cumulative_step():
+    """p landing exactly on a cumulative-mass boundary keeps exactly
+    that prefix: probs (.5, .3, .2), p=0.8 -> the .2 token is cut."""
+    logits = jnp.log(jnp.asarray([[0.5, 0.3, 0.2]]))
+    probs = np.asarray(S.sample_probs(
+        logits, SamplerConfig(temperature=1.0, top_p=0.8)))
+    np.testing.assert_allclose(probs[0], [0.625, 0.375, 0.0], atol=1e-6)
+    # nudging p past the boundary readmits the third token
+    probs = np.asarray(S.sample_probs(
+        logits, SamplerConfig(temperature=1.0, top_p=0.81)))
+    assert probs[0, 2] > 0
+
+
+def test_top_p_always_keeps_one_token():
+    logits = jnp.asarray([[10.0, -5.0, -5.0, -5.0]])
+    probs = np.asarray(S.sample_probs(
+        logits, SamplerConfig(temperature=1.0, top_p=0.01)))
+    assert probs[0, 0] == pytest.approx(1.0)
+
+
+def test_all_masked_but_one_with_nan_and_inf():
+    """NaN logits are masked; a vocabulary with one finite entry always
+    samples it, greedy or not."""
+    row = jnp.asarray([[-jnp.inf, jnp.nan, 2.5, -jnp.inf, jnp.nan]])
+    rids = jnp.zeros((1,), jnp.int32)
+    pos = jnp.zeros((1,), jnp.int32)
+    for cfg in (SamplerConfig(),                       # greedy
+                SamplerConfig(temperature=1.0, seed=2),
+                SamplerConfig(temperature=0.5, top_k=3, top_p=0.9)):
+        tok = S.sample_tokens(row, rids, pos, cfg)
+        assert int(tok[0]) == 2, cfg
+    probs = np.asarray(S.sample_probs(row, SamplerConfig(temperature=1.0)))
+    np.testing.assert_allclose(probs[0], [0, 0, 1, 0, 0], atol=1e-7)
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="temperature"):
+        SamplerConfig(temperature=-0.1)
+    with pytest.raises(ValueError, match="top_p"):
+        SamplerConfig(top_p=0.0)
+    with pytest.raises(ValueError, match="top_k"):
+        SamplerConfig(top_k=-1)
+
+
+def test_sample_probs_matches_categorical_frequencies():
+    """The probs the rejection sampler compares are the distribution the
+    categorical draw actually follows (coarse chi-square-free check)."""
+    cfg = SamplerConfig(temperature=1.0, top_k=4, seed=11)
+    logits = jnp.asarray([3.0, 2.0, 1.0, 0.5, -1.0, -2.0])
+    probs = np.asarray(S.sample_probs(logits, cfg))
+    draws = np.asarray(jax.vmap(
+        lambda i: S.sample_tokens(logits[None], jnp.asarray([0]),
+                                  i[None].astype(jnp.int32), cfg)[0])(
+        jnp.arange(4000)))
+    freq = np.bincount(draws, minlength=6) / 4000
+    assert freq[4] == 0 and freq[5] == 0                 # top-k cut
+    np.testing.assert_allclose(freq[:4], probs[:4], atol=0.03)

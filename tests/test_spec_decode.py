@@ -1,0 +1,306 @@
+"""Self-speculative decoding conformance.
+
+The load-bearing claims:
+
+  1. `verify_attn` row i == a plain paged decode step at position
+     positions[b] + i, bit for bit — the verify pass's logits ARE the
+     plain decode path's logits.
+  2. Greedy speculative engine outputs are token-for-token identical to
+     the plain (non-speculative) engine, across (draft, verify) policy
+     pairs spanning fp4 / fp8 / fp16 drafts over shared cache formats.
+  3. Self-drafting (draft policy == verify policy) accepts every draft:
+     the k sequential draft steps and the one batched verify pass are
+     the same computation, so argmax prefix-match cannot fail.
+  4. Paged-KV rollback keeps the allocator honest: after every round
+     (and at drain) no page is leaked or double-freed, committed pages
+     equal what live block tables reference, and reservations balance.
+  5. Sampled mode stays per-request deterministic (same request alone ==
+     inside a mixed batch) and drains cleanly.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import exec_plan
+from repro.core import kvcache as KV
+from repro.core.policy import get_policy
+from repro.launch.engine import Engine, EngineConfig, Request
+from repro.serving import SamplerConfig, SpecConfig
+from repro.serving.spec_decode import validate_policy_pair
+
+VERIFY_POLICY = "kv4_attn8_packed"
+ECFG = EngineConfig(page_size=8, n_pages=32, max_batch=3,
+                    max_pages_per_req=4, token_budget=16, prefill_chunk=8)
+LENS = [(9, 5), (14, 7), (5, 4)]
+K = 3
+
+# (draft, verify) pairs spanning fp4 / fp8 / fp16 drafts; each pair
+# shares one KV-cache storage format (the page pool is common to both)
+POLICY_PAIRS = [
+    ("w4a4_kv4_attn4", "kv4_attn8_packed"),    # all-fp4 draft, fp4 cache
+    ("attn_fp8_dpa", "kv8_attn_f32"),          # fp8 draft, fp8 cache
+    ("attn_fp16_dpa", "kv16_attn_f32"),        # fp16 draft, fp16 cache
+]
+
+
+@pytest.fixture(scope="module")
+def base():
+    from repro.configs import get_config, reduce_config
+    from repro.models import build_model
+    cfg = reduce_config(get_config("qwen3-4b")).replace(policy=VERIFY_POLICY)
+    model = build_model(cfg)
+    # params are policy-independent: one init serves every policy pair
+    return cfg, model, model.init(jax.random.PRNGKey(0))
+
+
+def _requests(vocab, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=s0).astype(np.int32),
+                    max_new=g)
+            for i, (s0, g) in enumerate(LENS)]
+
+
+def _by_rid(engine, rid):
+    return [r for r in engine.finished if r.rid == rid][0]
+
+
+# -----------------------------------------------------------------------------
+# 1. verify_attn == stepped paged decode, bit for bit
+# -----------------------------------------------------------------------------
+
+def _paged_cache(pol, lengths, ps=8, n_kv=2, hd=16, seed=3):
+    B = len(lengths)
+    S = max(-(-n // ps) for n in lengths) * ps
+    ks = jax.random.split(jax.random.PRNGKey(seed), 2)
+    k = jax.random.normal(ks[0], (B, S, n_kv, hd))
+    v = jax.random.normal(ks[1], (B, S, n_kv, hd))
+    ref = KV.update_kv_cache(
+        KV.init_kv_cache(B, S, n_kv, hd, fmt=pol.fmt_kv,
+                         packed=pol.kv_packed),
+        k, v, 0, fmt=pol.fmt_kv, packed=pol.kv_packed)
+    return KV.paged_from_contiguous(ref, lengths, page_size=ps)
+
+
+@pytest.mark.parametrize("pol_name", ["kv4_attn8_packed", "kv8_attn_f32",
+                                      "attn_fp16_dpa", "attn_fp4_packed"])
+def test_verify_attn_matches_stepped_paged_decode(pol_name):
+    """Row i of one Sq-token verify pass == a single-token paged decode
+    at position positions[b] + i, for every row and request — the
+    exactness greedy speculation stands on."""
+    pol = get_policy(pol_name)
+    lengths, sq, hd = [13, 17, 9], 3, 16
+    cache = _paged_cache(pol, lengths)
+    q = jax.random.normal(jax.random.PRNGKey(5), (3, sq, 4, hd))
+    positions = jnp.asarray([n - sq for n in lengths], jnp.int32)
+    verify = exec_plan.resolve("verify_attn", pol, sq=sq)
+    assert verify.name == "jnp_gather"
+    got = verify.run(q, cache, positions, policy=pol, scale=hd ** -0.5)
+    decode = exec_plan.route("paged_decode", "jnp_gather")
+    for i in range(sq):
+        want = decode.run(q[:, i:i + 1], cache, positions + i, policy=pol,
+                          scale=hd ** -0.5)
+        assert np.array_equal(np.asarray(got[:, i:i + 1]),
+                              np.asarray(want)), (pol_name, i)
+
+
+def test_verify_attn_registered_and_described():
+    """The op is a first-class plan-table citizen: resolvable,
+    introspectable, and refused for raw-f32-cache policies."""
+    assert "verify_attn" in exec_plan.ops()
+    d = exec_plan.describe("verify_attn", VERIFY_POLICY, sq=K + 1,
+                           batch=3, page_size=8, max_pages=4, kv_heads=2,
+                           hd=16)
+    assert d["route"] == "jnp_gather" and d["bytes_moved"] > 0
+    with pytest.raises(exec_plan.PlanError, match="kv_quantized"):
+        exec_plan.resolve("verify_attn", "fp16_dpa", sq=2)
+
+
+# -----------------------------------------------------------------------------
+# 2-3. greedy bit-identity + self-draft full acceptance
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("draft,verify", POLICY_PAIRS,
+                         ids=[f"{d}->{v}" for d, v in POLICY_PAIRS])
+def test_spec_engine_greedy_matches_plain_engine(base, draft, verify):
+    """The pinned invariant: greedy speculative decoding emits exactly
+    the plain engine's tokens, whatever the draft precision."""
+    from repro.models import build_model
+    cfg, _, params = base
+    model = build_model(cfg.replace(policy=verify))
+    plain = Engine(model, params, ECFG)
+    plain.run(_requests(cfg.vocab_size))
+    spec = Engine(model, params, ECFG, spec=SpecConfig(draft, k=K))
+    rep = spec.run(_requests(cfg.vocab_size))
+    assert rep["n_requests"] == len(LENS)
+    for r in plain.finished:
+        got = _by_rid(spec, r.rid)
+        assert got.out_tokens == r.out_tokens, (r.rid, draft, verify)
+        assert np.array_equal(got.tokens(), r.tokens())
+    # report plumbing: the engine states who drafted and who verified
+    assert rep["spec_draft_policy"] == draft
+    assert rep["draft_route"] in ("pallas_block_table", "jnp_gather")
+    assert rep["verify_route"] == "jnp_gather"
+    assert 0.0 <= rep["acceptance_rate"] <= 1.0
+    assert 1.0 <= rep["eff_tokens_per_round"] <= K + 1
+
+
+def test_self_draft_accepts_every_token(base):
+    """draft == verify: the k draft steps recompute exactly what the
+    batched verify recomputes, so every draft is accepted and rounds
+    advance k+1 tokens (modulo max_new clamping)."""
+    cfg, model, params = base
+    spec = Engine(model, params, ECFG, spec=SpecConfig(VERIFY_POLICY, k=K))
+    rep = spec.run(_requests(cfg.vocab_size))
+    assert rep["acceptance_rate"] == 1.0
+    assert rep["eff_tokens_per_round"] > K * 0.5   # clamp-limited, not
+    assert spec.drafted == spec.drafts_accepted    # rejection-limited
+
+
+# -----------------------------------------------------------------------------
+# 4. paged-KV rollback: allocator invariants
+# -----------------------------------------------------------------------------
+
+def _check_alloc_invariants(engine):
+    alloc = engine.alloc
+    live = [r for r in engine.slots if r is not None]
+    assert alloc.in_use == sum(len(r.pages) for r in live)
+    assert alloc.reserved == sum(r.reserved_left for r in live)
+    assert alloc.reserved <= alloc.n_free
+    assert alloc.in_use + alloc.n_free == alloc.capacity - 1
+    # every committed page is referenced by its owner's table row only
+    # once prefill lands (a PREFILL slot's row stays scratch by design)
+    from repro.launch.engine import DECODE
+    for r in live:
+        row = engine._table[r.slot]
+        if r.state == DECODE:
+            assert list(row[:len(r.pages)]) == r.pages
+            assert np.all(row[len(r.pages):] == KV.SCRATCH_PAGE)
+        else:
+            assert np.all(row == KV.SCRATCH_PAGE)
+
+
+def test_spec_rollback_allocator_invariants(base):
+    """Step the spec engine tick by tick: after every tick the allocator
+    balances (no leaked/double-freed pages, reservations match), at
+    least one rollback returned pages mid-flight, and the drain is
+    clean."""
+    cfg, model, params = base
+    engine = Engine(model, params, ECFG,
+                    spec=SpecConfig("w4a4_kv4_attn4", k=K))
+    rollbacks = []
+    orig_free = engine.alloc.free
+
+    def spy_free(pages, **kw):
+        if kw.get("to_reserved"):
+            rollbacks.append(list(pages))
+        return orig_free(pages, **kw)
+
+    engine.alloc.free = spy_free
+    for req in _requests(cfg.vocab_size):
+        engine.submit(req)
+    now = 0.0
+    while engine.waiting or any(engine.slots):
+        engine.step(now)
+        _check_alloc_invariants(engine)
+        now += 1.0
+    assert engine.alloc.in_use == 0
+    assert engine.alloc.reserved == 0
+    assert np.all(engine._table == KV.SCRATCH_PAGE)
+    # the draft window crossed page boundaries: rollback really ran
+    assert rollbacks, "no speculative rollback exercised"
+    assert all(p != KV.SCRATCH_PAGE for pages in rollbacks for p in pages)
+
+
+def test_page_allocator_reservation_api():
+    """Unit-level reservation/commit/rollback accounting + error paths."""
+    a = KV.PageAllocator(8)                    # 7 allocatable
+    a.reserve(5)
+    assert a.n_available == 2 and a.n_free == 7
+    assert not a.can_alloc(3)                  # reserved pages untouchable
+    other = a.alloc(2)                         # the unreserved remainder
+    with pytest.raises(MemoryError):
+        a.alloc(1)                             # only reserved pages left
+    got = a.alloc(3, reserved=True)            # commit from reservation
+    assert a.reserved == 2 and a.in_use == 5
+    a.free(got[1:], to_reserved=True)          # rollback
+    assert a.reserved == 4 and a.in_use == 3
+    with pytest.raises(ValueError, match="double free"):
+        a.free([got[1]])
+    with pytest.raises(ValueError, match="exceeds reserved"):
+        a.alloc(5, reserved=True)
+    with pytest.raises(ValueError, match="unreserve"):
+        a.unreserve(5)
+    a.unreserve(4)
+    a.free([got[0]])
+    a.free(other)
+    assert a.in_use == 0 and a.reserved == 0 and a.n_free == 7
+    with pytest.raises(MemoryError):
+        a.reserve(8)
+
+
+# -----------------------------------------------------------------------------
+# 5. sampled mode: determinism + drain
+# -----------------------------------------------------------------------------
+
+SAMPLED = SamplerConfig(temperature=0.8, top_k=16, top_p=0.95, seed=7)
+
+
+def test_sampled_request_alone_matches_mixed_batch(base):
+    """The deterministic-sampling regression: a request's sampled tokens
+    are identical whether it is served alone or inside a mixed batch
+    (per-request threefry streams, no batch-composition coupling)."""
+    cfg, model, params = base
+    batch = Engine(model, params, ECFG, sampler=SAMPLED)
+    batch.run(_requests(cfg.vocab_size))
+    for req in _requests(cfg.vocab_size):
+        alone = Engine(model, params, ECFG, sampler=SAMPLED)
+        alone.run([req])
+        assert alone.finished[0].out_tokens == \
+            _by_rid(batch, req.rid).out_tokens, req.rid
+
+
+def test_sampled_spec_deterministic_and_drains(base):
+    """Speculative + sampled: reruns reproduce token-for-token (all
+    randomness is keyed, none is ambient) and the allocator drains."""
+    cfg, model, params = base
+    outs = []
+    for _ in range(2):
+        e = Engine(model, params, ECFG, sampler=SAMPLED,
+                   spec=SpecConfig("w4a4_kv4_attn4", k=K))
+        rep = e.run(_requests(cfg.vocab_size))
+        assert rep["n_requests"] == len(LENS)
+        assert e.alloc.in_use == 0 and e.alloc.reserved == 0
+        outs.append({r.rid: list(r.out_tokens) for r in e.finished})
+    assert outs[0] == outs[1]
+    # every request emitted exactly max_new tokens (no eos in play)
+    for (_, g), (rid, toks) in zip(LENS, sorted(outs[0].items())):
+        assert len(toks) == g, rid
+
+
+# -----------------------------------------------------------------------------
+# validation
+# -----------------------------------------------------------------------------
+
+def test_mismatched_cache_formats_rejected(base):
+    cfg, model, params = base
+    with pytest.raises(ValueError, match="cache format"):
+        Engine(model, params, ECFG, spec=SpecConfig("attn_fp8_dpa"))
+    with pytest.raises(ValueError, match="raw f32 cache"):
+        validate_policy_pair("fp16_dpa", VERIFY_POLICY)
+    with pytest.raises(ValueError, match="k must be"):
+        SpecConfig("w4a4_kv4_attn4", k=0)
+
+
+def test_spec_window_counts_against_s_max(base):
+    """A request whose prompt+max_new fits S_max but whose draft window
+    does not is rejected up front (the reservation prices speculation)."""
+    cfg, model, params = base
+    engine = Engine(model, params, ECFG,
+                    spec=SpecConfig("w4a4_kv4_attn4", k=K))
+    big = Request(rid=99, prompt=np.zeros(ECFG.s_max - K + 1, np.int32),
+                  max_new=K - 1)
+    with pytest.raises(ValueError, match="draft"):
+        engine.submit(big)
