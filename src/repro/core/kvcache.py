@@ -250,27 +250,37 @@ def gather_paged_kv(cache):
     return out
 
 
-def write_prefill_rows(cache, rows, page_ids, length: int):
-    """Scatter a prefill's first `length` contiguous rows into pages.
+def write_prefill_rows(cache, rows, page_ids, length: int, *,
+                       start: int = 0):
+    """Scatter a prefill's rows [`start`, `length`) into pages.
 
     rows: contiguous-layout pytree with leaves (S, KV, ...) (one request,
-    batch dim already stripped); page_ids: host list of allocated pages in
-    timeline order; length: host int, number of live rows.  Copies whole
-    pages plus the partial tail page — pure relayout, so the pages hold
-    codes/scales bit-identical to the staging cache's.  Returns the cache
-    with updated pools."""
+    batch dim already stripped); page_ids: host list of the request's
+    pages in timeline order; length: host int, number of live rows;
+    start: host int, first row to write (rows before it — a shared or
+    copy-on-write prefix the engine matched from the prefix cache — are
+    already in their pages and MUST NOT be rewritten: pages below the
+    start row may be read-only shared pages).  Copies whole pages plus
+    the partial head/tail pages — pure relayout, so the pages hold
+    codes/scales bit-identical to the staging cache's.  Returns the
+    cache with updated pools."""
     ps = cache["k_codes"].shape[1]
     n_need = -(-length // ps) if length else 0
     if n_need > len(page_ids):
         raise ValueError(f"{length} rows need {n_need} pages, "
                          f"got {len(page_ids)}")
+    if not 0 <= start <= length:
+        raise ValueError(f"start ({start}) outside [0, {length}]")
     out = dict(cache)
     for key in QUANT_KEYS:
         pool, src = out[key], rows[key]
         for j in range(n_need):
+            if (j + 1) * ps <= start:
+                continue                    # page fully covered by prefix
             pid = int(page_ids[j])
+            lo = max(start - j * ps, 0)
             n = min(ps, length - j * ps)
-            pool = pool.at[pid, :n].set(src[j * ps:j * ps + n])
+            pool = pool.at[pid, lo:n].set(src[j * ps + lo:j * ps + n])
         out[key] = pool
     return out
 
@@ -291,7 +301,9 @@ def paged_from_contiguous(ref, lengths, *, page_size: int,
     if n_pages is None:
         n_pages = sum(n_need) + 2
     alloc = PageAllocator(n_pages)
-    table = np.full((B, max(n_need)), SCRATCH_PAGE, np.int32)
+    # empty workloads are legal (an engine draining to idle): the table
+    # is a valid all-scratch (B, 1) — never max() of an empty sequence
+    table = np.full((B, max(n_need, default=1)), SCRATCH_PAGE, np.int32)
     cache = {key: jnp.zeros((n_pages, page_size) + ref[key].shape[2:],
                             ref[key].dtype) for key in QUANT_KEYS}
     for b, n in enumerate(lengths):
@@ -339,7 +351,18 @@ class PageAllocator:
     rejected draft tokens return without becoming grabbable by anyone
     else); `unreserve(n)` releases the unused remainder at finish.
     Invariant: ``reserved <= n_free`` always — every reserved page is
-    physically on the free list until committed."""
+    physically on the free list until committed.
+
+    Reference counts (the prefix-sharing protocol): `alloc` hands a page
+    out with refcount 1; `incref` adds holders (a prefix-cache entry, a
+    request matching a cached prefix).  `free` is a *decref* — the page
+    only returns to the free list when its last holder releases it, so a
+    shared page can never be freed or re-handed-out while any request's
+    block table still points at it.  Shared pages (refcount > 1) are
+    read-only by convention: a diverging request must copy-on-write into
+    a private page (the engine's `_cow_copy`).  Rollback
+    (`to_reserved=True`) refuses shared pages outright — only a page the
+    caller exclusively owns can fold back into its reservation."""
 
     def __init__(self, capacity: int):
         if capacity < 2:
@@ -347,6 +370,7 @@ class PageAllocator:
         self.capacity = capacity
         self._free = list(range(capacity - 1, 0, -1))   # pop() -> page 1 first
         self._used = set()
+        self._refs = {}                                 # page -> holder count
         self.reserved = 0
         self.peak_in_use = 0
 
@@ -395,19 +419,48 @@ class PageAllocator:
                               "available")
         pages = [self._free.pop() for _ in range(n)]
         self._used.update(pages)
+        for p in pages:
+            self._refs[p] = 1
         self.peak_in_use = max(self.peak_in_use, self.in_use)
         return pages
 
+    def incref(self, pages) -> None:
+        """Add one holder to each in-use page (prefix sharing: a cache
+        entry or a prefix-hit request pointing its table at the page).
+        Referencing a page nobody holds is a bug, not a no-op."""
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(f"incref of page {p} that is not in use")
+            self._refs[p] += 1
+
+    def refcount(self, page) -> int:
+        """Current holder count (0 for free pages and the scratch page)."""
+        return self._refs.get(page, 0)
+
+    def is_shared(self, page) -> bool:
+        """True when more than one holder references the page (read-only
+        by the copy-on-write convention)."""
+        return self.refcount(page) > 1
+
     def free(self, pages, *, to_reserved: bool = False) -> None:
-        """Return pages to the free list; with `to_reserved`, back into
-        the caller's reservation (rollback) instead of the open pool."""
+        """Drop one holder per page (decref); a page returns to the free
+        list only when its last holder releases it.  With `to_reserved`,
+        the page folds back into the caller's reservation (rollback) —
+        refused for shared pages, which the caller does not own alone."""
         for p in pages:
             if p == SCRATCH_PAGE:
                 raise ValueError("page 0 is the reserved scratch page")
             if p not in self._used:
                 raise ValueError(f"double free of page {p}")
-            self._used.remove(p)
-            self._free.append(p)
+            if to_reserved and self._refs[p] > 1:
+                raise ValueError(
+                    f"page {p} is shared ({self._refs[p]} holders); a "
+                    "rollback may only reclaim exclusively-owned pages")
+            self._refs[p] -= 1
+            if self._refs[p] == 0:
+                del self._refs[p]
+                self._used.remove(p)
+                self._free.append(p)
         if to_reserved:
             self.reserved += len(pages)
 

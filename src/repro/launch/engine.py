@@ -14,13 +14,29 @@ Request lifecycle — admit -> prefill -> decode -> finish/evict:
   admit   : a waiting request is admitted when a decode slot is free and
             the `PageAllocator` can reserve ceil((prompt + max_new) /
             page) pages (full reservation, so a request never OOMs
-            mid-decode; pages are reused off the free list).
+            mid-decode; pages are reused off the free list).  With the
+            prefix cache on (`EngineConfig.prefix_cache`), admission
+            first matches the prompt against the radix index
+            (`repro.serving.prefix_cache`): fully-matched pages are
+            shared read-only into the block table (allocator refcounts
+            keep them alive), a partial-page match copies-on-write into
+            a private page, only the uncovered remainder allocates fresh
+            pages, and cold cached prefixes LRU-evict under pool
+            pressure.
   prefill : the prompt runs in fixed-size chunks against a contiguous
             (1, S_max) *staging* cache — the PR-2 quantized-cache path,
             unchanged — then the staged rows scatter into the request's
             pages (`write_prefill_rows`, pure relayout, bit-identical
             codes/scales).  The final chunk's logits yield the first
-            generated token.
+            generated token.  A prefix-hit request first materializes
+            the matched rows from its (shared) pages into staging (pure
+            relayout again) and prefills only from the divergence point
+            — the skipped chunks are the `prefill_tokens_saved` the
+            report counts; outputs stay bit-identical to a cold serve
+            because the shared pages hold exactly the codes/scales a
+            cold prefill of the same tokens would have written.  After
+            the scatter, the request's pure full-prompt pages register
+            in the prefix index for later requests to hit.
   decode  : all running requests step together through one fixed-shape
             jit'd call; each slot writes its token into its own page
             (`paged_write_token`) and attends through its block-table row
@@ -28,9 +44,11 @@ Request lifecycle — admit -> prefill -> decode -> finish/evict:
             block-table kernel by default, with the `dpa_paged_decode_
             attn` jnp gather fallback pinned bit-identical.  Idle slots
             point at the scratch page and are ignored.
-  finish  : on max_new (or eos) the request's pages return to the free
-            list and its table row resets to scratch — eviction is page
-            reuse, not memory churn.
+  finish  : on max_new (or eos) the request drops its page references;
+            private pages return to the free list, shared prefix pages
+            stay resident for future hits (the prefix cache holds its
+            own reference), and the table row resets to scratch —
+            eviction is page reuse, not memory churn.
 
 The scheduler is token-budgeted: every step spends up to
 `EngineConfig.token_budget` tokens — one per running decode request
@@ -80,6 +98,7 @@ from repro.core import kvcache as KV
 from repro.core.policy import get_policy
 from repro.serving import sampler as SMP
 from repro.serving import spec_decode as SPD
+from repro.serving.prefix_cache import PrefixCache, PrefixMatch
 from repro.serving.sampler import SamplerConfig
 from repro.serving.spec_decode import SpecConfig
 
@@ -99,6 +118,7 @@ class EngineConfig:
     token_budget: int = 16       # tokens per scheduler step
     prefill_chunk: int = 8       # prompt tokens per prefill call
     eos_id: int = -1             # stop token (-1: run to max_new)
+    prefix_cache: bool = False   # share prompt prefixes across requests
 
     @property
     def s_max(self) -> int:
@@ -120,6 +140,7 @@ class Request:
     slot: int = -1
     pos: int = 0                 # tokens written to the cache so far
     prefill_done: int = 0
+    prefill_skip: int = 0        # prompt tokens covered by a prefix hit
     t_admit: float = 0.0
     t_first: float = 0.0         # first generated token (TTFT anchor)
     t_finish: float = 0.0
@@ -140,18 +161,28 @@ class Request:
 
 def synthetic_workload(n_requests: int, *, vocab: int, seed: int = 0,
                        rate: float = 0.0, prompt_range=(8, 32),
-                       gen_range=(4, 16)) -> List[Request]:
+                       gen_range=(4, 16),
+                       shared_prefix: int = 0) -> List[Request]:
     """Open-loop synthetic traffic: Poisson arrivals (exponential
     inter-arrival at `rate` req/s; rate 0 = all arrive at t=0), prompt
-    and output lengths uniform over the given inclusive ranges."""
+    and output lengths uniform over the given inclusive ranges.
+
+    `shared_prefix` > 0 prepends the same `shared_prefix` drawn tokens
+    to every prompt — a system-prompt workload, the prefix cache's
+    target shape (the default 0 leaves the RNG stream, and so existing
+    workloads, untouched)."""
     rng = np.random.default_rng(seed)
     arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests)) \
         if rate > 0 else np.zeros(n_requests)
+    prefix = (rng.integers(0, vocab, size=shared_prefix).astype(np.int32)
+              if shared_prefix > 0 else None)
     reqs = []
     for i in range(n_requests):
         s0 = int(rng.integers(prompt_range[0], prompt_range[1] + 1))
         gen = int(rng.integers(gen_range[0], gen_range[1] + 1))
         prompt = rng.integers(0, vocab, size=s0).astype(np.int32)
+        if prefix is not None:
+            prompt = np.concatenate([prefix, prompt])
         reqs.append(Request(rid=i, prompt=prompt, max_new=gen,
                             arrival=float(arrivals[i])))
     return reqs
@@ -237,6 +268,8 @@ class Engine:
                                       donate_argnums=(2,))
             self._accept_fn = jax.jit(
                 SPD.make_accept_fn(self.sampler, spec.k))
+        self.prefix = (PrefixCache(ecfg.page_size, self.alloc)
+                       if ecfg.prefix_cache else None)
         self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
         self.waiting: List[Request] = []
         self._tables_dirty = False
@@ -248,6 +281,10 @@ class Engine:
         self.drafted = 0
         self.drafts_accepted = 0
         self.spec_emitted = 0
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.prefill_tokens_saved = 0
+        self.cow_copies = 0
 
     def _make_decode_step(self):
         """The jit'd plain decode step: model step + per-request sampling
@@ -297,13 +334,16 @@ class Engine:
 
     def _scatter_staging_to_pages(self, req: Request):
         """Copy the staged prompt rows into the request's pages (pure
-        relayout; see `core.kvcache.write_prefill_rows`)."""
-        n = req.n_prompt
+        relayout; see `core.kvcache.write_prefill_rows`).  A prefix-hit
+        request scatters only from its divergence point on — rows before
+        `prefill_skip` live in shared (or CoW-copied) pages that must
+        not be written."""
+        n, start = req.n_prompt, req.prefill_skip
         ids = req.pages
 
         def copy_group(pages, staged):
             rows = {k: staged[k][0] for k in KV.QUANT_KEYS}
-            return KV.write_prefill_rows(pages, rows, ids, n)
+            return KV.write_prefill_rows(pages, rows, ids, n, start=start)
 
         g = self.caches["groups"]["p0"]
         sg = self._staging["groups"]["p0"]
@@ -313,7 +353,50 @@ class Engine:
         for i, (pc, sc) in enumerate(zip(self.caches["tail"],
                                          self._staging["tail"])):
             rows = {k: sc[k][0] for k in KV.QUANT_KEYS}
-            self.caches["tail"][i] = KV.write_prefill_rows(pc, rows, ids, n)
+            self.caches["tail"][i] = KV.write_prefill_rows(pc, rows, ids, n,
+                                                           start=start)
+
+    def _cow_copy(self, src: int, dst: int, n_rows: int):
+        """Copy the first `n_rows` rows of pool page `src` into the
+        private page `dst`, every layer — pure relayout (codes and
+        scales move bit-for-bit), so the diverging request's view of the
+        partially-shared block is exactly what a cold prefill would have
+        written there.  The shared source page is read, never written."""
+        def copy_group(pool):
+            return {k: pool[k].at[dst, :n_rows].set(pool[k][src, :n_rows])
+                    for k in KV.QUANT_KEYS}
+
+        g = self.caches["groups"]["p0"]
+        g2 = jax.vmap(copy_group)({k: g[k] for k in KV.QUANT_KEYS})
+        self.caches["groups"]["p0"] = dict(g, **g2)
+        for i, pc in enumerate(self.caches["tail"]):
+            self.caches["tail"][i] = dict(pc, **copy_group(pc))
+        self.cow_copies += 1
+
+    def _load_prefix_to_staging(self, req: Request):
+        """Materialize the matched rows [0, prefill_skip) from the
+        request's pages into the contiguous staging cache — the inverse
+        relayout of `_scatter_staging_to_pages` — so the warm prefill's
+        chunks attend over exactly the codes/scales a cold prefill of
+        the same prompt would have staged (the bit-identity anchor)."""
+        m, ps = req.prefill_skip, self.ecfg.page_size
+        ids = np.asarray(req.pages[:-(-m // ps)], np.int32)
+
+        def gather_group(pool, staged):
+            out = {}
+            for k in KV.QUANT_KEYS:
+                rows = pool[k][ids].reshape((-1,) + pool[k].shape[2:])[:m]
+                out[k] = staged[k].at[0, :m].set(rows)
+            return out
+
+        g = self.caches["groups"]["p0"]
+        sg = self._staging["groups"]["p0"]
+        new = jax.vmap(gather_group)({k: g[k] for k in KV.QUANT_KEYS},
+                                     {k: sg[k] for k in KV.QUANT_KEYS})
+        self._staging["groups"]["p0"] = dict(sg, **new)
+        for i, (pc, sc) in enumerate(zip(self.caches["tail"],
+                                         self._staging["tail"])):
+            self._staging["tail"][i] = dict(sc, **gather_group(pc, sc))
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -339,24 +422,74 @@ class Engine:
         req.state = WAITING
         self.waiting.append(req)
 
+    def _match_prefix(self, req: Request) -> Optional[PrefixMatch]:
+        """Match-and-pin: look the prompt up in the prefix index, take a
+        request reference on every matched page (the shared full pages
+        AND the CoW source) *before* any eviction runs — a just-matched
+        cache-only page sits at refcount 1 and must not be reclaimed
+        between the match and this request's use of it — then LRU-evict
+        cold cached prefixes to cover the allocation shortfall."""
+        if self.prefix is None:
+            return None
+        e = self.ecfg
+        # at least one prompt token must prefill (the final chunk's
+        # logits yield the first generated token), and the warm start's
+        # fixed chunk window must fit inside the staging cache
+        limit = min(req.n_prompt - 1, e.s_max - e.prefill_chunk)
+        m = self.prefix.match(req.prompt, limit)
+        self.alloc.incref(m.pages)
+        if m.cow is not None:
+            self.alloc.incref([m.cow[0]])
+        short = (self._pages_needed(req) - len(m.pages)
+                 - self.alloc.n_available)
+        if short > 0:
+            self.prefix.evict(short)
+        return m
+
+    def _unpin_match(self, m: PrefixMatch):
+        """Drop the references `_match_prefix` pinned (admission did not
+        go through); the pages stay resident under the cache's own ref."""
+        self.alloc.free(m.pages)
+        if m.cow is not None:
+            self.alloc.free([m.cow[0]])
+
     def _admit(self, now: float):
         for slot in range(self.ecfg.max_batch):
             if self.slots[slot] is not None or not self.waiting:
                 continue
             req = self.waiting[0]
             n_pages = self._pages_needed(req)
-            if not self.alloc.can_alloc(n_pages):
+            match = self._match_prefix(req)     # pins matched pages
+            shared = list(match.pages) if match is not None else []
+            fresh = n_pages - len(shared)
+            if not self.alloc.can_alloc(fresh):
+                if match is not None:
+                    self._unpin_match(match)
                 break                      # FIFO: don't starve the head
             self.waiting.pop(0)
             if self.spec is not None:
                 # lazy commit: reserve the lifetime worst case, pop only
                 # the prompt's pages now; rounds commit/roll back the rest
-                self.alloc.reserve(n_pages)
                 n0 = -(-req.n_prompt // self.ecfg.page_size)
-                req.pages = self.alloc.alloc(n0, reserved=True)
-                req.reserved_left = n_pages - n0
+                self.alloc.reserve(fresh)
+                req.pages = shared + self.alloc.alloc(n0 - len(shared),
+                                                      reserved=True)
+                req.reserved_left = fresh - (n0 - len(shared))
             else:
-                req.pages = self.alloc.alloc(n_pages)
+                req.pages = shared + self.alloc.alloc(fresh)
+            if match is not None:
+                # stats count admissions, not retries: a request that
+                # waited several ticks for pages is still one query
+                self.prefix_queries += 1
+                req.prefill_skip = req.prefill_done = match.tokens
+                self.prefix_hits += match.tokens > 0
+                self.prefill_tokens_saved += match.tokens
+                if match.cow is not None:
+                    src, rows = match.cow
+                    # copy now, while the source pin is held; afterwards
+                    # the source's content no longer matters to us
+                    self._cow_copy(src, req.pages[len(shared)], rows)
+                    self.alloc.free([src])
             req.slot, req.state, req.t_admit = slot, PREFILL, now
             self.slots[slot] = req
             # the table row stays scratch until prefill lands: a PREFILL
@@ -414,7 +547,18 @@ class Engine:
         """Run one prompt chunk; returns real tokens consumed."""
         e = self.ecfg
         c0 = req.prefill_done
+        if req.prefill_skip > 0 and c0 == req.prefill_skip:
+            # first chunk of a prefix-hit request: pull the matched rows
+            # out of its (shared/CoW) pages into staging, then prefill
+            # only from the divergence point
+            self._load_prefix_to_staging(req)
         n = min(e.prefill_chunk, req.n_prompt - c0)
+        if c0 % e.prefill_chunk:
+            # realign a warm start to the chunk grid with one short
+            # chunk, so every later fixed-size window stays inside the
+            # staging cache (S_max is a chunk multiple; chunk splits do
+            # not change numerics — rows are quantized before attention)
+            n = min(n, e.prefill_chunk - c0 % e.prefill_chunk)
         chunk = np.zeros((1, e.prefill_chunk), np.int32)
         chunk[0, :n] = req.prompt[c0:c0 + n]
         logits, self._staging = self._prefill_fn(
@@ -425,6 +569,10 @@ class Engine:
             self._scatter_staging_to_pages(req)
             self._table[req.slot, :len(req.pages)] = req.pages
             self._tables_dirty = True
+            if self.prefix is not None:
+                # only now do the pages hold the prompt's rows; register
+                # the pure full-prompt blocks for later requests to hit
+                self.prefix.insert(req.prompt, req.pages)
             # the first generated token sits at timeline index n_prompt;
             # greedy configs reduce to the original argmax bit-for-bit
             first = int(SMP.sample_tokens(
@@ -543,10 +691,12 @@ class Engine:
             # a partially-prefilled request MUST keep the baton until its
             # prompt is fully staged: the staging cache is shared, so
             # switching mid-prefill would interleave two prompts' rows
-            # (there is at most one partial request by induction).  Ties
-            # on t_admit (same tick) then break by admission order (rid)
+            # (there is at most one partial request by induction; a
+            # prefix-hit request starts at prefill_done == prefill_skip,
+            # so "untouched" is done == skip, not done == 0).  Ties on
+            # t_admit (same tick) then break by admission order (rid)
             budget -= self._prefill_step(
-                min(pre, key=lambda r: (r.prefill_done == 0,
+                min(pre, key=lambda r: (r.prefill_done == r.prefill_skip,
                                         r.t_admit, r.rid)), now)
         self._admit(now)        # freed slots/pages admit within the tick
         if self._tables_dirty:
@@ -564,8 +714,9 @@ class Engine:
         return sum(r.pos for r in self.slots if r is not None)
 
     def reset_stats(self):
-        """Clear accounting between workloads (keeps compiled steps and
-        the page pool; only legal when nothing is in flight)."""
+        """Clear accounting between workloads (keeps compiled steps, the
+        page pool, AND any resident cached prefixes — a warm cache is
+        the point; only legal when nothing is in flight)."""
         if any(self.slots) or self.waiting:
             raise RuntimeError("reset_stats with requests in flight")
         self.finished = []
@@ -576,6 +727,10 @@ class Engine:
         self.drafted = 0
         self.drafts_accepted = 0
         self.spec_emitted = 0
+        self.prefix_queries = 0
+        self.prefix_hits = 0
+        self.prefill_tokens_saved = 0
+        self.cow_copies = 0
         self.alloc.peak_in_use = self.alloc.in_use
 
     def run(self, requests: List[Request]) -> dict:
@@ -638,7 +793,9 @@ class Engine:
             "wall_s": wall,
             "steps": self.n_steps,
             "gen_tokens": gen,
-            "tokens_per_s": gen / wall if wall > 0 else float("inf"),
+            # 0.0 (not inf) on a zero-length wall: the report must stay
+            # strict JSON (json.dumps(..., allow_nan=False) round-trips)
+            "tokens_per_s": gen / wall if wall > 0 else 0.0,
             "p50_latency_s": float(np.percentile(lat, 50)) if len(lat) else 0.0,
             "p99_latency_s": float(np.percentile(lat, 99)) if len(lat) else 0.0,
             "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else 0.0,
@@ -673,6 +830,24 @@ class Engine:
                 "verify_route": self.verify_plan["route"],
                 "verify_backend": self.verify_plan["backend"],
             })
+        if self.prefix is not None:
+            e, cfg, pol = self.ecfg, self.cfg, self.pol
+            n_attn = self._n_groups + self._n_tail
+            resident = KV.paged_kv_cache_nbytes(
+                0, self.prefix.n_pages, e.page_size, cfg.n_kv_heads,
+                cfg.hd, fmt=pol.fmt_kv, packed=pol.kv_packed)
+            rep.update({
+                "prefix_queries": self.prefix_queries,
+                "prefix_hits": self.prefix_hits,
+                "prefix_hit_rate": (self.prefix_hits / self.prefix_queries
+                                    if self.prefix_queries else 0.0),
+                "prefill_tokens_saved": self.prefill_tokens_saved,
+                "prefix_cow_copies": self.cow_copies,
+                "resident_prefix_pages": self.prefix.n_pages,
+                # what keeping the cached prefixes warm actually costs at
+                # format width (quantized pages make residency cheap)
+                "resident_prefix_bytes": resident["paged"] * n_attn,
+            })
         return rep
 
 
@@ -706,4 +881,11 @@ def format_report(rep: dict, policy: str) -> str:
            f"{rep['acceptance_rate']:.0%}, "
            f"{rep['eff_tokens_per_round']:.2f} tokens/round over "
            f"{rep['spec_rounds']} rounds"
-           if "spec_k" in rep else ""))
+           if "spec_k" in rep else "")
+        + (f"\nprefix: {rep['prefix_hits']}/{rep['prefix_queries']} hits "
+           f"({rep['prefix_hit_rate']:.0%}), "
+           f"{rep['prefill_tokens_saved']} prefill tokens saved, "
+           f"{rep['prefix_cow_copies']} CoW copies; "
+           f"{rep['resident_prefix_pages']} resident pages "
+           f"({rep['resident_prefix_bytes'] / mb:.2f} MB at format width)"
+           if "prefix_hit_rate" in rep else ""))

@@ -112,16 +112,17 @@ def run_engine(cfg, model, args):
                         max_batch=args.max_batch or args.batch,
                         max_pages_per_req=args.max_pages_per_req,
                         token_budget=args.token_budget,
-                        prefill_chunk=args.prefill_chunk)
+                        prefill_chunk=args.prefill_chunk,
+                        prefix_cache=args.prefix_cache)
     spec = SpecConfig(args.spec_draft, args.spec_k) if args.spec_draft \
         else None
     spec_k = args.spec_k if spec else 0
-    if args.prompt_len + args.gen + spec_k > ecfg.s_max:
+    if args.shared_prefix + args.prompt_len + args.gen + spec_k > ecfg.s_max:
         raise SystemExit(
-            f"--prompt-len {args.prompt_len} + --gen {args.gen} (+ the "
-            f"{spec_k}-token draft window) exceeds the engine's S_max = "
-            f"{ecfg.s_max} tokens/request; raise --max-pages-per-req or "
-            "--page-size")
+            f"--shared-prefix {args.shared_prefix} + --prompt-len "
+            f"{args.prompt_len} + --gen {args.gen} (+ the {spec_k}-token "
+            f"draft window) exceeds the engine's S_max = {ecfg.s_max} "
+            "tokens/request; raise --max-pages-per-req or --page-size")
     sampler = SamplerConfig(temperature=args.temperature, top_k=args.top_k,
                             top_p=args.top_p, seed=args.seed)
     params = model.init(jax.random.PRNGKey(0))
@@ -130,12 +131,18 @@ def run_engine(cfg, model, args):
         args.requests, vocab=cfg.vocab_size, seed=args.seed,
         rate=args.rate, prompt_range=(max(1, args.prompt_len // 2),
                                       args.prompt_len),
-        gen_range=(max(1, args.gen // 2), args.gen))
+        gen_range=(max(1, args.gen // 2), args.gen),
+        shared_prefix=args.shared_prefix)
     rep = engine.run(reqs)
     print(format_report(rep, cfg.policy))
     if engine.finished:
         sample = engine.finished[0]
         print(f"sample (req {sample.rid}): {sample.tokens()[:24].tolist()}")
+    if args.json:
+        import json
+        with open(args.json, "w") as f:
+            json.dump(rep, f, indent=2, allow_nan=False)
+        print(f"report written to {args.json}")
     return rep
 
 
@@ -165,6 +172,14 @@ def main(argv=None):
                     help="Poisson arrival rate, req/s (0 = all at t=0)")
     eg.add_argument("--seed", type=int, default=0,
                     help="workload + sampler RNG seed")
+    eg.add_argument("--prefix-cache", action="store_true",
+                    help="share identical prompt prefixes across requests "
+                         "(ref-counted pages + copy-on-write)")
+    eg.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many shared system-prompt tokens "
+                         "to every synthetic request")
+    eg.add_argument("--json", default="",
+                    help="also dump the engine report to this JSON file")
     sg = ap.add_argument_group("sampling + speculation", "engine mode")
     sg.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")

@@ -1,9 +1,13 @@
-"""Serving-side subsystems: sampling + self-speculative decoding.
+"""Serving-side subsystems: sampling, speculation, prefix sharing.
 
 `sampler` is the fixed-shape, jit-able token sampler (temperature /
 top-k / top-p) with per-request threefry keys, `spec_decode` the
-draft-low-precision / verify-high-precision speculative decoder the
-continuous-batching engine (`repro.launch.engine`) mounts on top of it.
+draft-low-precision / verify-high-precision speculative decoder, and
+`prefix_cache` the hash-keyed radix index that shares identical prompt
+prefixes across requests through ref-counted read-only pages (with
+copy-on-write on divergence).  The continuous-batching engine
+(`repro.launch.engine`) mounts all three.
 """
+from .prefix_cache import PrefixCache        # noqa: F401
 from .sampler import SamplerConfig           # noqa: F401
 from .spec_decode import SpecConfig          # noqa: F401

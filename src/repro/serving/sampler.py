@@ -41,7 +41,9 @@ class SamplerConfig:
 
     temperature 0 means greedy (argmax over raw logits, bit-for-bit the
     pre-sampler engine behavior); top_k 0 and top_p 1.0 disable those
-    filters.  `seed` roots every request's threefry stream."""
+    filters (`top_k >= vocab` keeps every token too, so it likewise
+    disables — never a static out-of-range index).  `seed` roots every
+    request's threefry stream."""
     temperature: float = 0.0
     top_k: int = 0
     top_p: float = 1.0
@@ -89,16 +91,24 @@ def filter_logits(logits, cfg: SamplerConfig):
 
     NaN entries are treated as masked (-inf) up front, then temperature
     scaling, then top-k (keep the k largest; ties at the k-th value are
-    all kept — deterministic), then top-p over the *remaining* mass:
-    sort descending, keep tokens while the mass strictly before them is
-    < p.  When p lands exactly on a cumulative step, exactly that prefix
-    survives (the boundary token whose prefix mass equals p is cut).
-    At least one token always survives every filter."""
+    all kept — deterministic; ``k >= V`` keeps everything and so
+    disables the filter, like k = 0), then top-p over the *remaining*
+    mass: sort descending, keep tokens while the mass strictly before
+    them is < p.  When p lands exactly on a cumulative step, exactly
+    that prefix survives (the boundary token whose prefix mass equals p
+    is cut).  At least one token always survives every filter — an
+    all-masked row (every logit NaN/-inf, e.g. a fully-masked vocabulary
+    slice) degenerates to token 0, matching `greedy_tokens`' argmax on
+    that row, so softmax/categorical (and the speculative p/q ratios)
+    never see NaN."""
     x = logits.astype(jnp.float32)
     x = jnp.where(jnp.isnan(x), _NEG, x)
+    dead = ~jnp.any(x > _NEG, axis=-1, keepdims=True)
+    first = jnp.arange(x.shape[-1]) == 0
+    x = jnp.where(dead & first, 0.0, x)
     if cfg.temperature > 0:
         x = x / cfg.temperature
-    if cfg.top_k > 0:
+    if 0 < cfg.top_k < x.shape[-1]:
         kth = jnp.sort(x, axis=-1)[..., -cfg.top_k, None]
         x = jnp.where(x < kth, _NEG, x)
     if cfg.top_p < 1.0:

@@ -154,6 +154,20 @@ def test_prefill_baton_survives_same_tick_admission(model_and_params):
         assert np.array_equal(np.asarray(req.out_tokens), want), req.rid
 
 
+def test_engine_report_is_strict_json(served):
+    """The report must round-trip through strict JSON even at wall == 0
+    (tokens_per_s reports 0.0, never inf/NaN — json.dumps(...,
+    allow_nan=False) is what downstream harnesses hold us to)."""
+    import json
+    engine, _ = served
+    for wall in (0.0, 1.0):
+        rep = engine.report(wall)
+        back = json.loads(json.dumps(rep, allow_nan=False))
+        assert back == rep
+    assert engine.report(0.0)["tokens_per_s"] == 0.0
+    assert engine.report(1.0)["tokens_per_s"] > 0.0
+
+
 def test_engine_rejects_raw_cache_policy(model_and_params):
     model, _ = model_and_params
     cfg = model.cfg.replace(policy="fp32")

@@ -238,6 +238,108 @@ def test_allocator_utilization():
     assert a.peak_in_use == 5
 
 
+def test_allocator_refcount_lifecycle():
+    """free() is a decref: a shared page survives every free but the
+    last, then returns to the free list exactly once."""
+    a = KV.PageAllocator(8)
+    (p,) = a.alloc(1)
+    assert a.refcount(p) == 1 and not a.is_shared(p)
+    a.incref([p])
+    a.incref([p])
+    assert a.refcount(p) == 3 and a.is_shared(p)
+    a.free([p])
+    a.free([p])
+    assert a.in_use == 1                       # still held once
+    assert a.refcount(p) == 1
+    a.free([p])
+    assert a.in_use == 0 and a.refcount(p) == 0
+    with pytest.raises(ValueError, match="double free"):
+        a.free([p])
+    with pytest.raises(ValueError, match="not in use"):
+        a.incref([p])
+
+
+def test_allocator_shared_page_never_rehanded_out():
+    """While any holder remains, a shared page never reappears from
+    alloc() — the prefix cache's never-freed-while-referenced contract."""
+    a = KV.PageAllocator(6)
+    (p,) = a.alloc(1)
+    a.incref([p])                              # second holder
+    a.free([p])                                # first holder exits
+    assert p not in a.alloc(4)                 # the whole rest of the pool
+    with pytest.raises(MemoryError):
+        a.alloc(1)
+
+
+def test_allocator_rollback_refuses_shared_pages():
+    """Speculative rollback (free to_reserved=True) may only reclaim
+    exclusively-owned pages; a shared prefix page inside the rollback
+    set is an accounting bug and must raise, not silently corrupt."""
+    a = KV.PageAllocator(8)
+    a.reserve(2)
+    pages = a.alloc(2, reserved=True)
+    a.incref(pages[:1])
+    with pytest.raises(ValueError, match="shared"):
+        a.free(pages[:1], to_reserved=True)
+    a.free(pages[1:], to_reserved=True)        # exclusive page: fine
+    assert a.reserved == 1
+
+
+def test_paged_from_contiguous_empty_and_single():
+    """Empty workloads are legal: an all-scratch table over a minimal
+    pool, not a max() crash; a single request round-trips exactly."""
+    ref = KV.init_kv_cache(0, 2 * PS, 2, 16, fmt="fp8_e4m3")
+    cache = KV.paged_from_contiguous(ref, [], page_size=PS)
+    assert cache["block_table"].shape[0] == 0
+    assert cache["block_table"].shape[1] >= 1
+    k, v = _raw_kv(5, 1, 2 * PS, 2, 16)
+    one = KV.update_kv_cache(KV.init_kv_cache(1, 2 * PS, 2, 16,
+                                              fmt="fp8_e4m3"),
+                             k, v, 0, fmt="fp8_e4m3")
+    paged = KV.paged_from_contiguous(one, [2 * PS], page_size=PS)
+    _assert_rows_equal(KV.gather_paged_kv(paged), one, [2 * PS])
+
+
+@pytest.mark.parametrize("fmt,packed", [("fp8_e4m3", False),
+                                        ("fp4_e2m1", True)],
+                         ids=["fp8", "fp4_packed"])
+def test_prefill_scatter_start_skips_prefix_pages(fmt, packed):
+    """write_prefill_rows(start=m) leaves every row before m untouched —
+    full prefix pages are never written (shared-page safety) and a CoW
+    page keeps its copied head rows — while rows from m on land
+    bit-identical to a start=0 scatter."""
+    n_kv, hd, L, start = 2, 16, 2 * PS + 3, PS + 5   # mid-page divergence
+    k, v = _raw_kv(6, 1, 3 * PS, n_kv, hd)
+    ref = KV.update_kv_cache(
+        KV.init_kv_cache(1, 3 * PS, n_kv, hd, fmt=fmt, packed=packed),
+        k, v, 0, fmt=fmt, packed=packed)
+    rows = {key: ref[key][0] for key in KV.QUANT_KEYS}
+    _, table, pages = _alloc_tables([L], 3, capacity=8)
+    base = dict(KV.init_paged_kv_cache(8, PS, n_kv, hd, fmt=fmt,
+                                       packed=packed),
+                block_table=jnp.asarray(table))
+    # poison the pool so "untouched" is observable
+    poisoned = {key: jnp.ones_like(base[key]) for key in KV.QUANT_KEYS}
+    part = KV.write_prefill_rows(dict(base, **poisoned), rows, pages[0], L,
+                                 start=start)
+    full = KV.write_prefill_rows(base, rows, pages[0], L)
+    pids = pages[0]
+    for key in KV.QUANT_KEYS:
+        got = np.asarray(part[key])
+        # page 0 entirely before `start`: still poison
+        assert np.all(got[pids[0]] == 1), key
+        # page 1 rows before the in-page offset: still poison
+        assert np.all(got[pids[1], :start - PS] == 1), key
+        # everything from `start` up to `length` matches the full scatter
+        want = np.asarray(full[key])
+        assert np.array_equal(got[pids[1], start - PS:],
+                              want[pids[1], start - PS:]), key
+        assert np.array_equal(got[pids[2], :L - 2 * PS],
+                              want[pids[2], :L - 2 * PS]), key
+    with pytest.raises(ValueError, match="start"):
+        KV.write_prefill_rows(base, rows, pages[0], L, start=L + 1)
+
+
 # -----------------------------------------------------------------------------
 # byte accounting: live tokens, not B x S_max
 # -----------------------------------------------------------------------------

@@ -1,0 +1,347 @@
+"""Prefix-sharing copy-on-write paged KV cache conformance.
+
+The load-bearing claim (the serving mirror of "paging is pure
+relayout"): a prefix-hit request's greedy outputs are **bit-identical**
+to the same request served cold — shared pages hold exactly the
+codes/scales a cold prefill of the same tokens would have written, the
+warm prefill materializes them back into staging unchanged, and
+copy-on-write moves rows bit-for-bit.  Pinned across Table-I KV formats
+(packed fp4 included) with divergence mid-page, so the packed-codes
+relayout path is exercised where it could plausibly break.
+
+Plus: radix-index unit behavior (match / insert / CoW tail / LRU
+eviction) against a bare allocator, tick-by-tick allocator invariants
+under the refcount protocol (shared pages never freed or re-handed-out
+while referenced, CoW never mutates its source, no leak/double-free
+across admit -> hit -> diverge -> evict), and eviction under pool
+pressure.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import kvcache as KV
+from repro.launch.engine import Engine, EngineConfig, Request
+from repro.serving.prefix_cache import PrefixCache
+
+PS = 8
+
+# the Table-I KV formats the bit-identity claim is pinned across:
+# packed fp4 (the engine default), fp8, fp16
+POLICIES = ["kv4_attn8_packed", "attn_fp8_dpa", "attn_fp16_dpa"]
+
+
+def _ecfg(**kw):
+    base = dict(page_size=PS, n_pages=32, max_batch=3,
+                max_pages_per_req=4, token_budget=8, prefill_chunk=8)
+    base.update(kw)
+    return EngineConfig(**base)
+
+
+# -----------------------------------------------------------------------------
+# radix index unit behavior (bare allocator, no engine)
+# -----------------------------------------------------------------------------
+
+def _cache(capacity=32):
+    alloc = KV.PageAllocator(capacity)
+    return PrefixCache(PS, alloc), alloc
+
+
+def _toks(*blocks):
+    """Concatenate per-page token blocks into one prompt array."""
+    return np.concatenate([np.asarray(b, np.int32) for b in blocks])
+
+
+def test_match_walks_full_pages_and_respects_limit():
+    pc, alloc = _cache()
+    prompt = _toks(range(0, 8), range(8, 16), range(16, 24))
+    pages = alloc.alloc(3)
+    assert pc.insert(prompt, pages) == 3
+    assert all(alloc.refcount(p) == 2 for p in pages)   # owner + cache
+    m = pc.match(prompt, limit=len(prompt))
+    assert m.pages == pages and m.tokens == 24 and m.cow is None
+    # the limit caps coverage: 23 tokens -> 2 full pages + a 7-row CoW
+    m = pc.match(prompt, limit=23)
+    assert m.pages == pages[:2] and m.cow == (pages[2], 7)
+    assert m.tokens == 23
+    # a foreign prompt misses entirely
+    miss = pc.match(_toks(range(100, 124)), limit=24)
+    assert miss.pages == [] and miss.cow is None and miss.tokens == 0
+
+
+def test_match_finds_longest_cow_tail_among_siblings():
+    """Divergence inside a block picks the sibling sharing the longest
+    per-token common prefix as the CoW source."""
+    pc, alloc = _cache()
+    head = list(range(8))
+    a = _toks(head, [1, 2, 3, 4, 5, 6, 7, 8])
+    b = _toks(head, [1, 2, 9, 9, 9, 9, 9, 9])
+    pa, pb = alloc.alloc(2)
+    pc.insert(a, [pa, pa])          # page ids only matter per block
+    pc.insert(b, [pa, pb])
+    probe = _toks(head, [1, 2, 9, 9, 7, 7, 7, 7])   # 4 tokens with b's tail
+    m = pc.match(probe, limit=16)
+    assert m.pages == [pa]
+    assert m.cow == (pb, 4) and m.tokens == 8 + 4
+
+
+def test_insert_first_writer_wins_and_partial_tail_skipped():
+    pc, alloc = _cache()
+    prompt = _toks(range(8), range(8, 13))          # 13 tokens: 1 full page
+    p = alloc.alloc(2)
+    assert pc.insert(prompt, p) == 1                # tail block not indexed
+    assert pc.n_pages == 1
+    dup = alloc.alloc(2)
+    assert pc.insert(prompt, dup) == 0              # existing node kept
+    assert pc.match(prompt, limit=8).pages == [p[0]]
+    assert alloc.refcount(dup[0]) == 1              # no cache ref taken
+
+
+def test_lru_eviction_drops_coldest_leaf_and_pins_referenced():
+    pc, alloc = _cache()
+    cold = _toks(range(0, 8))
+    warm = _toks(range(10, 18))
+    pinned = _toks(range(20, 28))
+    (p_cold,) = alloc.alloc(1)
+    (p_warm,) = alloc.alloc(1)
+    (p_pin,) = alloc.alloc(1)
+    pc.insert(cold, [p_cold])
+    pc.insert(warm, [p_warm])
+    pc.insert(pinned, [p_pin])
+    alloc.free([p_cold]); alloc.free([p_warm])      # owners exit
+    # p_pin: owner stays -> refcount 2, not evictable
+    pc.match(warm, limit=8)                         # touch warm
+    assert pc.evict(1) == 1                         # drops cold, the LRU
+    assert pc.match(cold, limit=8).tokens == 0
+    assert pc.match(warm, limit=8).tokens == 8      # warm survived
+    assert pc.evict(5) == 1                         # warm goes; pin stays
+    assert pc.n_pages == 1
+    assert alloc.refcount(p_pin) == 2
+    # once the owner exits, the pin becomes evictable
+    alloc.free([p_pin])
+    assert pc.evict(1) == 1 and pc.n_pages == 0
+    assert alloc.in_use == 0                        # everything drained
+
+
+def test_eviction_drains_chains_deepest_first():
+    pc, alloc = _cache()
+    prompt = _toks(range(0, 8), range(8, 16), range(16, 24))
+    pages = alloc.alloc(3)
+    pc.insert(prompt, pages)
+    alloc.free(pages)
+    assert pc.evict(2) == 2
+    # the surviving node is the root block (parents outlive children)
+    m = pc.match(prompt, limit=24)
+    assert m.pages == pages[:1]
+    assert pc.drop_all() == 1
+    assert alloc.in_use == 0
+
+
+# -----------------------------------------------------------------------------
+# engine integration: bit-identity warm vs cold, across KV formats
+# -----------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def base():
+    from repro.configs import get_config, reduce_config
+    from repro.models import build_model
+    cfg = reduce_config(get_config("qwen3-4b")).replace(policy=POLICIES[0])
+    model = build_model(cfg)
+    # params are policy-independent: one init serves every policy
+    return cfg, model.init(jax.random.PRNGKey(0))
+
+
+def _shared_prefix_requests(vocab, seed=7):
+    """A (20 tokens), B (same first 12, diverges mid page 1 -> CoW),
+    C (same first 16, diverges on the page boundary -> pure 2-page hit)."""
+    rng = np.random.default_rng(seed)
+    base_p = rng.integers(0, vocab, size=20).astype(np.int32)
+    pb = base_p.copy(); pb[12:] = rng.integers(0, vocab, size=8)
+    pc_ = base_p.copy(); pc_[16:] = rng.integers(0, vocab, size=4)
+    return [Request(rid=0, prompt=base_p.copy(), max_new=5),
+            Request(rid=1, prompt=pb, max_new=5),
+            Request(rid=2, prompt=pc_, max_new=5)]
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_prefix_hit_outputs_bit_identical_to_cold(base, policy):
+    """The pinned invariant: serve A then B (CoW mid-page) then C (full
+    2-page hit) sequentially through one warm engine; every request's
+    greedy tokens equal a cold engine's, bit for bit."""
+    from repro.models import build_model
+    cfg, params = base
+    model = build_model(cfg.replace(policy=policy))
+    warm = Engine(model, params, _ecfg(prefix_cache=True))
+    cold = Engine(model, params, _ecfg())
+    reqs = _shared_prefix_requests(cfg.vocab_size)
+    for r in reqs:
+        warm.run([r])                   # sequential: B and C hit A's pages
+    for r in _shared_prefix_requests(cfg.vocab_size):
+        cold.run([r])
+    cold_out = {r.rid: list(r.out_tokens) for r in cold.finished}
+    for r in warm.finished:
+        assert list(r.out_tokens) == cold_out[r.rid], (r.rid, policy)
+    # and the hits really happened: B saved 12 tokens (CoW), C saved 16
+    assert warm.prefix_queries == 3 and warm.prefix_hits == 2
+    assert warm.prefill_tokens_saved == 12 + 16
+    assert warm.cow_copies == 1
+    # all request pages freed; only the cache's residents remain
+    assert warm.alloc.in_use == warm.prefix.n_pages > 0
+    warm.prefix.drop_all()
+    assert warm.alloc.in_use == 0
+
+
+def test_prefix_report_keys_and_json(base):
+    import json
+    from repro.models import build_model
+    cfg, params = base
+    model = build_model(cfg)
+    engine = Engine(model, params, _ecfg(prefix_cache=True))
+    for r in _shared_prefix_requests(cfg.vocab_size):
+        engine.run([r])
+    rep = engine.report(1.0)
+    assert rep["prefix_hit_rate"] == pytest.approx(2 / 3)
+    assert rep["prefill_tokens_saved"] == 28
+    assert rep["prefix_cow_copies"] == 1
+    assert rep["resident_prefix_pages"] == engine.prefix.n_pages > 0
+    assert rep["resident_prefix_bytes"] > 0
+    json.loads(json.dumps(rep, allow_nan=False))
+    from repro.launch.engine import format_report
+    txt = format_report(rep, cfg.policy)
+    assert "prefix:" in txt and "28 prefill tokens saved" in txt
+    # reset clears counters but keeps the resident cache warm
+    engine.reset_stats()
+    assert engine.prefix_queries == 0 and engine.prefix.n_pages > 0
+    assert "prefix_hit_rate" not in Engine(
+        model, params, _ecfg()).report(1.0)     # off by default
+
+
+# -----------------------------------------------------------------------------
+# tick-by-tick allocator invariants under the refcount protocol
+# -----------------------------------------------------------------------------
+
+def _check_invariants(engine):
+    alloc = engine.alloc
+    live = [r for r in engine.slots if r is not None]
+    assert alloc.reserved <= alloc.n_free
+    assert alloc.in_use + alloc.n_free == alloc.capacity - 1
+    # every page is held by exactly its holders: requests (uniquely per
+    # request) + one cache ref per resident node
+    holders = {}
+    for r in live:
+        assert len(set(r.pages)) == len(r.pages)
+        for p in r.pages:
+            holders[p] = holders.get(p, 0) + 1
+    stack = list(engine.prefix.root.children.values())
+    n_nodes = 0
+    while stack:
+        nd = stack.pop()
+        stack.extend(nd.children.values())
+        n_nodes += 1
+        holders[nd.page] = holders.get(nd.page, 0) + 1
+        # a cached page is never on the free list while referenced
+        assert alloc.refcount(nd.page) >= 1
+    assert n_nodes == engine.prefix.n_nodes
+    for p, n in holders.items():
+        assert alloc.refcount(p) == n, p
+
+
+def test_tick_by_tick_invariants_across_hit_diverge_evict(base):
+    """Drive admit -> hit -> mid-page divergence -> finish -> evict one
+    scheduler tick at a time, checking after every tick that refcounts
+    equal the true holder sets, reserved <= n_free, and shared pages
+    never leak or double-free.  CoW source bytes are snapshotted before
+    the diverging request runs and must be untouched after."""
+    from repro.models import build_model
+    cfg, params = base
+    model = build_model(cfg)
+    engine = Engine(model, params, _ecfg(prefix_cache=True))
+    reqs = _shared_prefix_requests(cfg.vocab_size)
+
+    def run_one(req):
+        engine.submit(req)
+        now = 0.0
+        while engine.waiting or any(engine.slots):
+            engine.step(now)
+            _check_invariants(engine)
+            now += 1.0
+
+    run_one(reqs[0])
+    shared_pages = [nd.page for nd in
+                    _walk(engine.prefix.root)]
+    snap = {k: np.asarray(engine.caches["groups"]["p0"][k][:, shared_pages])
+            for k in KV.QUANT_KEYS}
+    run_one(reqs[1])                             # CoW divergence mid-page
+    for k in KV.QUANT_KEYS:
+        now_ = np.asarray(engine.caches["groups"]["p0"][k][:, shared_pages])
+        assert np.array_equal(now_, snap[k]), k  # source never mutated
+    run_one(reqs[2])                             # pure full-page hit
+    assert engine.cow_copies == 1
+    assert engine.alloc.in_use == engine.prefix.n_pages
+    engine.prefix.drop_all()
+    assert engine.prefix.n_nodes == 0
+    assert engine.alloc.in_use == 0 and engine.alloc.reserved == 0
+
+
+def _walk(root):
+    out, stack = [], list(root.children.values())
+    while stack:
+        nd = stack.pop()
+        stack.extend(nd.children.values())
+        out.append(nd)
+    return out
+
+
+def test_spec_mode_composes_with_prefix_cache(base):
+    """Speculative decoding + prefix sharing: rollback never reclaims a
+    shared page (the allocator would raise), outputs still match the
+    plain warm engine, and everything drains."""
+    from repro.launch.engine import SpecConfig
+    from repro.models import build_model
+    cfg, params = base
+    model = build_model(cfg)
+    plain = Engine(model, params, _ecfg(prefix_cache=True))
+    spec = Engine(model, params,
+                  _ecfg(prefix_cache=True, token_budget=16),
+                  spec=SpecConfig(POLICIES[0], k=3))
+    for r in _shared_prefix_requests(cfg.vocab_size):
+        plain.run([r])
+    for r in _shared_prefix_requests(cfg.vocab_size):
+        spec.run([r])
+    plain_out = {r.rid: list(r.out_tokens) for r in plain.finished}
+    for r in spec.finished:
+        assert list(r.out_tokens) == plain_out[r.rid], r.rid
+    assert spec.prefix_hits == 2
+    assert spec.alloc.reserved == 0
+    spec.prefix.drop_all()
+    assert spec.alloc.in_use == 0
+
+
+def test_eviction_under_pool_pressure(base):
+    """A pool too small to hold residents + a new request evicts cold
+    prefixes instead of stalling; referenced pages survive."""
+    from repro.models import build_model
+    cfg, params = base
+    model = build_model(cfg)
+    # 9 usable pages; one 20-token resident (3 pages) + a 20-token
+    # request needing ceil(25/8)=4 fresh pages on a miss
+    engine = Engine(model, params, _ecfg(prefix_cache=True, n_pages=10))
+    rng = np.random.default_rng(11)
+    V = cfg.vocab_size
+    a = Request(rid=0, prompt=rng.integers(0, V, 20).astype(np.int32),
+                max_new=5)
+    engine.run([a])
+    assert engine.prefix.n_pages == 2            # 20 tokens: 2 full blocks
+    # two unrelated requests need 4 pages each = 8 > 9 - 2 residents:
+    # admission must evict at least one cold resident to fit both at once
+    b = Request(rid=1, prompt=rng.integers(0, V, 20).astype(np.int32),
+                max_new=5)
+    c = Request(rid=2, prompt=rng.integers(0, V, 20).astype(np.int32),
+                max_new=5)
+    engine.run([b, c])
+    assert len(engine.finished) == 3             # nothing stalled
+    assert engine.prefix.n_pages < 2 + 2 + 2     # eviction really ran
+    engine.prefix.drop_all()
+    assert engine.alloc.in_use == 0

@@ -154,6 +154,46 @@ def test_all_masked_but_one_with_nan_and_inf():
     np.testing.assert_allclose(probs[0], [0, 0, 1, 0, 0], atol=1e-7)
 
 
+def test_top_k_at_or_above_vocab_disables_filter():
+    """top_k == V and top_k > V keep every token — identical to top_k=0
+    — instead of a static out-of-range sort index (crash)."""
+    logits = _logits(7, b=3, v=16)
+    off = S.sample_probs(logits, SamplerConfig(temperature=1.0, top_k=0))
+    for k in (16, 17, 1000):
+        got = S.sample_probs(logits,
+                             SamplerConfig(temperature=1.0, top_k=k))
+        assert np.array_equal(np.asarray(got), np.asarray(off)), k
+    toks = S.sample_tokens(logits, jnp.arange(3, dtype=jnp.int32),
+                           jnp.arange(3, dtype=jnp.int32),
+                           SamplerConfig(temperature=0.8, top_k=16, seed=4))
+    want = S.sample_tokens(logits, jnp.arange(3, dtype=jnp.int32),
+                           jnp.arange(3, dtype=jnp.int32),
+                           SamplerConfig(temperature=0.8, top_k=0, seed=4))
+    assert np.array_equal(np.asarray(toks), np.asarray(want))
+
+
+def test_all_nan_row_survives_every_filter():
+    """A fully-dead row (every logit NaN/-inf) degenerates to token 0 —
+    matching greedy's argmax-of-all-(-inf) — with finite one-hot probs,
+    never NaN probabilities or an undefined categorical."""
+    rows = jnp.stack([jnp.full((8,), jnp.nan),
+                      jnp.full((8,), -jnp.inf),
+                      jnp.zeros((8,)).at[5].set(3.0)])   # control row
+    rids = jnp.zeros((3,), jnp.int32)
+    pos = jnp.zeros((3,), jnp.int32)
+    for cfg in (SamplerConfig(),                          # greedy
+                SamplerConfig(temperature=1.0, seed=9),
+                SamplerConfig(temperature=0.7, top_k=4, top_p=0.9),
+                SamplerConfig(temperature=1.0, top_p=0.5)):
+        toks = np.asarray(S.sample_tokens(rows, rids, pos, cfg))
+        assert toks[0] == 0 and toks[1] == 0, cfg
+        probs = np.asarray(S.sample_probs(rows, cfg))
+        assert np.all(np.isfinite(probs)), cfg
+        np.testing.assert_allclose(probs[0], np.eye(8)[0], atol=1e-7)
+        np.testing.assert_allclose(probs[1], np.eye(8)[0], atol=1e-7)
+        assert probs[2, 5] > 0                            # control intact
+
+
 def test_config_validation():
     with pytest.raises(ValueError, match="temperature"):
         SamplerConfig(temperature=-0.1)

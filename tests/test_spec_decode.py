@@ -280,6 +280,36 @@ def test_sampled_spec_deterministic_and_drains(base):
         assert len(toks) == g, rid
 
 
+def test_accept_fn_survives_all_nan_target_row():
+    """An all-NaN verify-logits row must not poison rejection sampling:
+    the filtered target degenerates to one-hot token 0 (the sampler's
+    dead-row rule), so p/q stays finite, the accept decision is defined,
+    and the emitted tokens are valid vocabulary ids — sampled and greedy
+    accept paths both."""
+    from repro.serving.spec_decode import make_accept_fn
+    k, V = 2, 8
+    rids = jnp.asarray([0, 1], jnp.int32)
+    pos = jnp.asarray([5, 9], jnp.int32)
+    drafts = jnp.asarray([[3, 4], [2, 6]], jnp.int32)
+    tl = jax.random.normal(jax.random.PRNGKey(0), (2, k + 1, V))
+    tl = tl.at[0].set(jnp.nan)                     # request 0: dead rows
+    scfg = SamplerConfig(temperature=0.9, top_k=4, top_p=0.9, seed=13)
+    q = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(1), (2, k, V)), axis=-1)
+    emitted, acc = make_accept_fn(scfg, k)(drafts, q, tl, rids, pos)
+    emitted, acc = np.asarray(emitted), np.asarray(acc)
+    assert np.all((emitted >= 0) & (emitted < V))
+    assert np.all((acc >= 0) & (acc <= k))
+    # dead target: p(draft) == 0 for any nonzero draft -> no accepts,
+    # and the correction draw lands on the surviving token 0
+    assert acc[0] == 0 and emitted[0, 0] == 0
+    g_emit, g_acc = make_accept_fn(SamplerConfig(), k)(
+        drafts, None, tl, rids, pos)
+    g_emit, g_acc = np.asarray(g_emit), np.asarray(g_acc)
+    assert np.all((g_emit >= 0) & (g_emit < V))
+    assert g_acc[0] == 0 and g_emit[0, 0] == 0     # argmax of all-(-inf)
+
+
 # -----------------------------------------------------------------------------
 # validation
 # -----------------------------------------------------------------------------
