@@ -247,7 +247,69 @@ def prefix_cache():
              f"tokens_per_s={rep['tokens_per_s']:.1f}")]
 
 
+def tp_collective_bytes():
+    """Bytes on the tensor-parallel wire, measured from the actual
+    arrays (``.nbytes``), not the bytes model.
+
+      wire_fp16 / wire_fp8 : f32 payload bytes vs the codes + scale
+          `quantize_for_wire` actually ships for a (256, 1024) f32 slab
+          — the wire contract of the serving/training collectives
+          (Table-I widths: ~2x / ~4x under an f32 wire).
+      kv_pool_wire : f32 KV pool bytes per layer vs the packed-fp4
+          codes+scales a TP shard all-gathers per decode step (reduced
+          qwen3-4b, kv4_attn8_packed — the same arrays `Engine.report`
+          prices as tp_wire_bytes_per_step_layer).
+      tokens_per_s : the engine serving with tp=8 *requested* — on the
+          single-device bench job this exercises the replicate-not-
+          crash fallback end to end; a loose CPU tripwire.
+    """
+    import time
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduce_config
+    from repro.core.kvcache import QUANT_KEYS
+    from repro.distributed.collectives import quantize_for_wire
+    from repro.launch.engine import Engine, EngineConfig, synthetic_workload
+    from repro.models import build_model
+
+    x = jax.random.normal(jax.random.PRNGKey(0), (256, 1024), jnp.float32)
+    wire = {}
+    for fmt in ("fp16", "fp8_e4m3"):
+        q, s = quantize_for_wire(x, fmt)
+        wire[fmt] = x.nbytes / (q.nbytes + s.nbytes)
+
+    cfg = reduce_config(get_config("qwen3-4b")).replace(
+        policy="kv4_attn8_packed")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    ecfg = EngineConfig(page_size=8, n_pages=48, max_batch=4,
+                        max_pages_per_req=6, token_budget=16,
+                        prefill_chunk=8, tp=8)
+    engine = Engine(model, params, ecfg)
+    g = engine.caches["groups"]["p0"]
+    pool_layer = sum(int(g[k].nbytes)
+                     for k in QUANT_KEYS) // engine._n_groups
+    f32_layer = 2 * 4 * (ecfg.n_pages * ecfg.page_size
+                         * cfg.n_kv_heads * cfg.hd)
+    # warm-up compiles prefill + decode; the timed run reuses them
+    engine.run(synthetic_workload(2, vocab=cfg.vocab_size, seed=1,
+                                  prompt_range=(8, 24), gen_range=(4, 10)))
+    engine.reset_stats()
+    t0 = time.perf_counter()
+    rep = engine.run(synthetic_workload(4, vocab=cfg.vocab_size, seed=0,
+                                        prompt_range=(8, 24),
+                                        gen_range=(4, 10)))
+    us = (time.perf_counter() - t0) * 1e6
+    return [("engine/tp_collective_bytes", us,
+             f"wire_fp16={wire['fp16']:.3f}x "
+             f"wire_fp8={wire['fp8_e4m3']:.3f}x "
+             f"kv_pool_wire={f32_layer / pool_layer:.3f}x "
+             f"tokens_per_s={rep['tokens_per_s']:.1f}")]
+
+
 ALL = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather,
-       spec_decode, prefix_cache]
+       spec_decode, prefix_cache, tp_collective_bytes]
 SMOKE = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather,
-         spec_decode, prefix_cache]
+         spec_decode, prefix_cache, tp_collective_bytes]

@@ -69,3 +69,38 @@ def wire_bytes(grads, fmt_name: str) -> int:
     fmt = get_format(fmt_name)
     n = sum(g.size for g in jax.tree.leaves(grads))
     return n * fmt.bits // 8
+
+
+class CompressedReducer:
+    """Error-feedback compressed gradient reducer, exec-plan routed.
+
+    Functional by design: the error-feedback state is a plain pytree
+    (`init_state`) the caller threads through the train step, so it
+    checkpoints/restores with the training state.  Each `reduce` resolves
+    the `allreduce` exec-plan op — the wire-compressed route when the
+    mesh axis is real, the f32 psum reference on a size-1 axis — instead
+    of branching on format/device-count inline (that pre-plan branching
+    is gone)."""
+
+    def __init__(self, fmt_name: str = "fp8_e4m3"):
+        self.fmt_name = fmt_name
+
+    def init_state(self, grads):
+        return ef_state_like(grads)
+
+    def reduce(self, grads, err_state, axis_name: str, *, n_devices: int):
+        """Inside a shard_map body: -> (mean_grads, new_err_state).
+
+        `n_devices` is static (the mesh axis size) so route resolution
+        happens at trace time, like every other exec-plan call site."""
+        from repro.core import exec_plan
+        entry = exec_plan.resolve("allreduce", None,
+                                  wire_fmt=self.fmt_name,
+                                  n_devices=n_devices)
+        flat_g, td = jax.tree_util.tree_flatten(grads)
+        flat_e = jax.tree.leaves(err_state)
+        outs = [entry.run(g, e, axis_name=axis_name,
+                          fmt_name=self.fmt_name)
+                for g, e in zip(flat_g, flat_e)]
+        return (td.unflatten([o[0] for o in outs]),
+                td.unflatten([o[1] for o in outs]))

@@ -57,17 +57,34 @@ def _ambient_mesh():
     return None if m.empty else m
 
 
+def _in_manual_region(mesh) -> bool:
+    """True inside a shard_map/pmap body over this mesh: its axes are
+    bound as named axes, values are per-shard, and a sharding constraint
+    on a manual axis is an error rather than a layout hint."""
+    for name in mesh.axis_names:
+        try:
+            jax.lax.axis_index(name)
+            return True
+        except NameError:
+            continue
+    return False
+
+
 def maybe_shard(x, *spec):
     """Guarded with_sharding_constraint for model-internal activations.
 
     spec elements: "data" (resolved to the DP axis group), "model", or
     None.  No-op when no mesh is ambient (single-device tests/examples),
-    when the named axis is missing, or when the dim doesn't divide the
-    axis size — so model code can pin its parallel layout unconditionally
-    (MaxText-style) and still run anywhere.
+    inside a shard_map body (per-shard values — the collective layer
+    owns the layout there), when the named axis is missing, or when the
+    dim doesn't divide the axis size — so model code can pin its
+    parallel layout unconditionally (MaxText-style) and still run
+    anywhere.
     """
     mesh = _ambient_mesh()
     if mesh is None:
+        return x
+    if _in_manual_region(mesh):
         return x
     names = set(mesh.axis_names)
     fixed = []

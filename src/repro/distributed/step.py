@@ -5,6 +5,12 @@ function suitable for jax.jit with sharded in/out; `make_serve_step`
 returns the decode step.  The cross-entropy supports chunked evaluation
 over the sequence (beyond-paper memory optimization — the unembedding
 logits for a 150k vocab dominate activation memory at 4k seq).
+
+Every matmul in these steps reaches the hardware through
+`core.exec_plan.resolve` — the backbone via `apply_linear`/attention
+routes, the unembed via the `unembed` plan op (`layers.apply_unembed`),
+and the gradient collective in `make_compressed_train_step` via the
+`allreduce` op.  No pre-plan branching survives here.
 """
 from __future__ import annotations
 
@@ -83,6 +89,56 @@ def make_train_step(model, opt_cfg: adamw.AdamWConfig):
         return {"params": new_params, "opt": new_opt}, metrics
 
     return train_step
+
+
+def make_compressed_train_step(model, opt_cfg: adamw.AdamWConfig, mesh,
+                               fmt_name: str = "fp8_e4m3",
+                               axis: str = "data"):
+    """Data-parallel train step with wire-compressed gradient reduction.
+
+    shard_map over `axis`: params/opt replicated, batch sharded on its
+    leading dim, per-shard grads all-reduced through the exec-plan
+    ``allreduce`` op — the wire-compressed route when `fmt_name` names a
+    wire format (format-width codes + f32 scales, error feedback carried
+    in state["err"]), the f32 psum reference when it is None.  The error
+    state has a leading device axis (one residual per device) and
+    checkpoints with the rest of the state; build it with
+    `init_err_state`.
+    """
+    from jax.sharding import PartitionSpec as P
+
+    from repro.distributed.collectives import CompressedReducer
+    from repro.distributed.tp import shard_map_compat
+
+    loss_fn = make_loss_fn(model)
+    reducer = CompressedReducer(fmt_name)
+    n_dev = int(dict(zip(mesh.axis_names, mesh.devices.shape))[axis])
+
+    def body(state, batch):
+        params, opt_state = state["params"], state["opt"]
+        err = jax.tree.map(lambda e: e[0], state["err"])
+        (loss, parts), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch)
+        grads, new_err = reducer.reduce(grads, err, axis, n_devices=n_dev)
+        new_params, new_opt, om = adamw.update(opt_cfg, grads, opt_state,
+                                               params)
+        loss = jax.lax.pmean(loss, axis)
+        parts = jax.tree.map(lambda t: jax.lax.pmean(t, axis), parts)
+        metrics = {"loss": parts["loss"], "aux": parts["aux"],
+                   "total": loss, **om}
+        new_state = {"params": new_params, "opt": new_opt,
+                     "err": jax.tree.map(lambda e: e[None], new_err)}
+        return new_state, metrics
+
+    state_specs = {"params": P(), "opt": P(), "err": P(axis)}
+    return shard_map_compat(body, mesh, in_specs=(state_specs, P(axis)),
+                            out_specs=(state_specs, P()), axis=axis)
+
+
+def init_err_state(params, n_devices: int):
+    """Per-device error-feedback residuals, leading axis = mesh axis."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_devices,) + p.shape, jnp.float32), params)
 
 
 def make_serve_step(model):

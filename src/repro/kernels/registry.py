@@ -381,6 +381,84 @@ exec_plan.register(
 
 
 # -----------------------------------------------------------------------------
+# sharded paged attention: the pool lives 1/n per device ("model" axis,
+# within-page rows — the cache_spec rule), the wire carries format-width
+# codes + per-row scales, and the reassembled pool runs the exact
+# single-device op.  Bit-identical to single-device serving by
+# construction: no cross-device float reduction touches the softmax.
+# -----------------------------------------------------------------------------
+
+def _pd_sharded(q, cache, positions, *, policy, scale):
+    from functools import partial
+
+    from repro.distributed import tp as TP
+    fn = partial(D.dpa_paged_decode_attn, fmt=policy.fmt_attn,
+                 fmt_kv=policy.fmt_kv, kv_packed=policy.kv_packed,
+                 scale=scale)
+    return TP.sharded_paged_attn(fn, q, cache, positions)
+
+
+def _va_sharded(q, cache, positions, *, policy, scale):
+    from functools import partial
+
+    from repro.distributed import tp as TP
+    fn = partial(D.dpa_paged_verify_attn, fmt=policy.fmt_attn,
+                 fmt_kv=policy.fmt_kv, kv_packed=policy.kv_packed,
+                 scale=scale)
+    return TP.sharded_paged_attn(fn, q, cache, positions)
+
+
+def _pool_rows(ctx):
+    """Rows in the whole page pool (what the all-gather moves)."""
+    return (ctx.get("n_pages", 0) * ctx.get("page_size", 0)
+            * ctx.get("kv_heads", 1))
+
+
+def _tp_wire_bytes(policy, ctx):
+    """Bytes-on-wire per device for the pool all-gather: each device
+    receives the other (n-1)/n of the pool as codes + per-row scales —
+    the same 2x/4x/8x under an f32 wire the cache bytes enjoy."""
+    n = ctx.get("n_devices", 1)
+    if n <= 1:
+        return 0
+    return int((n - 1) / n
+               * _kv_rows_bytes(policy, _pool_rows(ctx), ctx.get("hd", 0)))
+
+
+exec_plan.register(
+    "paged_decode", "paged_decode_sharded", backend="xla", run=_pd_sharded,
+    priority=20, reference="jnp_gather", tol=0.0,
+    predicate=lambda policy, ctx: {
+        "kv_quantized": policy.kv_quantized,
+        "multi_device": ctx.get("n_devices", 1) > 1},
+    # gather-route compute bytes + the wire term the plan now prices
+    bytes_moved=lambda policy, ctx: 3 * _kv_rows_bytes(
+        policy, _pd_view_rows(ctx), ctx.get("hd", 0))
+    + _tp_wire_bytes(policy, ctx),
+    tests=("tests/test_tp_engine.py::test_tp_engine_bit_identical_"
+           "across_formats",
+           "tests/test_tp_engine.py::test_tp_prefix_and_spec_decode_"
+           "bit_identical"),
+    note="shard_map over the \"model\" axis: all-gather pool shards at "
+         "format width (pure relayout), then the exact jnp_gather body — "
+         "bit-identical to single-device decode")
+
+exec_plan.register(
+    "verify_attn", "verify_attn_sharded", backend="xla", run=_va_sharded,
+    priority=10, reference="jnp_gather", tol=0.0,
+    predicate=lambda policy, ctx: {
+        "kv_quantized": policy.kv_quantized,
+        "multi_device": ctx.get("n_devices", 1) > 1},
+    bytes_moved=lambda policy, ctx: (3 + 2 * ctx.get("sq", 1))
+    * _kv_rows_bytes(policy, _pd_view_rows(ctx), ctx.get("hd", 0))
+    + _tp_wire_bytes(policy, ctx),
+    tests=("tests/test_tp_engine.py::test_tp_prefix_and_spec_decode_"
+           "bit_identical",),
+    note="sharded speculative verify: same pool all-gather wire, same "
+         "bit-exact batch-fold body as the jnp_gather reference")
+
+
+# -----------------------------------------------------------------------------
 # quantize_pack: fused row quantization (+fp4 nibble pack)
 # -----------------------------------------------------------------------------
 
@@ -417,3 +495,71 @@ exec_plan.register(
         or ctx.get("fmt") == "fp4_e2m1"},
     tests=("tests/test_kernels.py::test_quantize_rows_vs_ref",),
     note="jnp reference quantizer (+XLA nibble pack)")
+
+
+# -----------------------------------------------------------------------------
+# allreduce: gradient/partial reduction across a mesh axis (shard_map
+# body).  run(grad, err, *, axis_name, fmt_name) -> (mean, new_err)
+# -----------------------------------------------------------------------------
+
+def _ar_wire(grad, err, *, axis_name, fmt_name):
+    from repro.distributed.collectives import ef_compress_allreduce
+    return ef_compress_allreduce(grad, err, axis_name, fmt_name)
+
+
+def _ar_psum(grad, err, *, axis_name, fmt_name):
+    import jax
+    return (jax.lax.pmean(grad.astype(jnp.float32), axis_name),
+            jnp.zeros_like(err, dtype=jnp.float32))
+
+
+def _wire_fmt_bytes(ctx, default_bits=32):
+    from repro.core.formats import get_format
+    fmt = ctx.get("wire_fmt")
+    bits = get_format(fmt).bits if fmt else default_bits
+    return ctx.get("size", 0) * bits // 8
+
+
+exec_plan.register(
+    "allreduce", "wire_compressed", backend="xla", run=_ar_wire,
+    priority=10, reference="xla_psum_f32", tol=0.1,
+    predicate=lambda policy, ctx: {
+        "multi_device": ctx.get("n_devices", 1) > 1,
+        "wire_fmt": ctx.get("wire_fmt") is not None},
+    bytes_moved=lambda policy, ctx: _wire_fmt_bytes(ctx) + 4,
+    tests=("tests/test_distributed.py::"
+           "test_compressed_allreduce_error_feedback",
+           "tests/test_tp_engine.py::test_wire_collectives_parity",),
+    note="error-feedback all-gather at wire-format width, f32 "
+         "accumulation (the DPA contract on the slow axis); tol is the "
+         "fp8 wire's quantization noise, killed over steps by the "
+         "residual feedback")
+
+exec_plan.register(
+    "allreduce", "xla_psum_f32", backend="xla", run=_ar_psum, priority=0,
+    predicate=lambda policy, ctx: {},
+    bytes_moved=lambda policy, ctx: 4 * ctx.get("size", 0),
+    tests=("tests/test_distributed.py::"
+           "test_compressed_allreduce_error_feedback",),
+    note="plain f32 psum-mean (4 bytes/element on the wire); also the "
+         "identity on a size-1 axis")
+
+
+# -----------------------------------------------------------------------------
+# unembed: logits over the (tied) vocab table.  run(x, table, policy)
+# -> (B, S, V) f32-accumulated
+# -----------------------------------------------------------------------------
+
+def _ue_xla(x, table, policy):
+    return jnp.einsum("bsd,vd->bsv", x, table.astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+exec_plan.register(
+    "unembed", "xla_tied_table", backend="xla", run=_ue_xla, priority=0,
+    predicate=lambda policy, ctx: {},
+    bytes_moved=lambda policy, ctx: 4 * ctx.get("size", 0),
+    tests=("tests/test_layers.py", "tests/test_archs.py"),
+    note="fp32-accumulation logits over the transposed embedding table; "
+         "the narrow-format story deliberately stops before the unembed "
+         "(quality), so the only route is the wide reference")

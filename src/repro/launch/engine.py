@@ -85,6 +85,7 @@ Poisson traffic), `python -m repro.launch.serve --engine` (CLI demo).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import List, Optional
@@ -96,6 +97,7 @@ import numpy as np
 from repro.core import exec_plan
 from repro.core import kvcache as KV
 from repro.core.policy import get_policy
+from repro.distributed import tp as TP
 from repro.serving import sampler as SMP
 from repro.serving import spec_decode as SPD
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch
@@ -119,6 +121,13 @@ class EngineConfig:
     prefill_chunk: int = 8       # prompt tokens per prefill call
     eos_id: int = -1             # stop token (-1: run to max_new)
     prefix_cache: bool = False   # share prompt prefixes across requests
+    # tensor-parallel width: shard the page pool across a (1, tp) "model"
+    # mesh and serve through the `*_sharded` exec-plan routes (bit-
+    # identical outputs; the wire carries format-width codes + scales).
+    # Falls back to 1 — replicate, never crash — when tp exceeds the
+    # visible devices or page_size % tp != 0 (the within-page row dim is
+    # the sharded one); report() states the reason.
+    tp: int = 1
 
     @property
     def s_max(self) -> int:
@@ -213,13 +222,32 @@ class Engine:
                  spec: Optional[SpecConfig] = None):
         cfg = model.cfg
         pol = get_policy(cfg.policy)
+        # tensor parallelism: a (1, tp) host mesh whose "model" axis
+        # shards the page pool's within-page row dim (cache_spec's kv
+        # rule).  The fallback is replication, never a crash — the
+        # sharded routes' in_specs would reject a non-dividing dim.
+        self.tp, self.tp_fallback, self._mesh = 1, "", None
+        if ecfg.tp > 1:
+            n_dev = len(jax.devices())
+            if ecfg.tp > n_dev:
+                self.tp_fallback = (f"tp={ecfg.tp} exceeds {n_dev} visible "
+                                    "device(s); serving replicated")
+            elif ecfg.page_size % ecfg.tp:
+                self.tp_fallback = (f"page_size={ecfg.page_size} not "
+                                    f"divisible by tp={ecfg.tp}; serving "
+                                    "replicated")
+            else:
+                from repro.launch.mesh import make_host_mesh
+                self._mesh = make_host_mesh(n_data=1, n_model=ecfg.tp)
+                self.tp = ecfg.tp
         # the plan layer owns kernel selection: resolving the decode route
         # up front validates the policy (a raw-f32-cache policy has no
         # paged_decode route) and makes the report say which kernel runs
         self._plan_ctx = dict(batch=ecfg.max_batch,
                               page_size=ecfg.page_size,
                               max_pages=ecfg.max_pages_per_req,
-                              kv_heads=cfg.n_kv_heads, hd=cfg.hd)
+                              kv_heads=cfg.n_kv_heads, hd=cfg.hd,
+                              n_pages=ecfg.n_pages, n_devices=self.tp)
         try:
             self.plan = exec_plan.describe("paged_decode", pol,
                                            **self._plan_ctx)
@@ -244,7 +272,11 @@ class Engine:
         self._table = np.full((ecfg.max_batch, ecfg.max_pages_per_req),
                               KV.SCRATCH_PAGE, np.int32)
         self.caches = self._init_paged_caches()
-        # staging cache for chunked prefill: the contiguous PR-2 layout
+        if self._mesh is not None:
+            self.caches = self._shard_caches(self.caches)
+        # staging cache for chunked prefill: the contiguous PR-2 layout.
+        # NEVER sharded: prefill softmax must stay a single-device
+        # reduction or chunked prefill loses bit-identity with tp=1
         self._staging = model.init_caches(1, ecfg.s_max)
         self._prefill_fn = jax.jit(model.decode_step)
         self._decode_fn = jax.jit(self._make_decode_step(),
@@ -322,6 +354,29 @@ class Engine:
         tail = [jax.tree.map(jnp.array, one) for _ in range(self._n_tail)]
         return {"groups": {"p0": g}, "tail": tail}
 
+    def _shard_caches(self, caches):
+        """Lay the page pools out on the TP mesh: within-page rows on
+        "model" (cache_spec's kv rule, 1/tp of the pool per device),
+        block tables replicated."""
+        from repro.distributed.sharding import cache_spec
+        return jax.tree.map(jax.device_put, caches,
+                            cache_spec(caches, self._mesh))
+
+    def _tp_scope(self):
+        """Context the jit'd steps run (and so trace) under: the active
+        TP mesh the sharded exec-plan routes read back."""
+        return (TP.activate(self._mesh) if self._mesh is not None
+                else contextlib.nullcontext())
+
+    def _unshard_staging(self):
+        """Pull the staging cache back to one uncommitted device buffer.
+        Gathering prefix rows out of the sharded pool leaves staging
+        sharded; prefill must stay a single-device reduction (the tp=1
+        bit-identity anchor), and an *uncommitted* buffer keeps the later
+        pool scatter free to colocate with the committed pool."""
+        self._staging = jax.tree.map(
+            lambda x: jnp.asarray(np.asarray(x)), self._staging)
+
     def _sync_tables(self):
         """Push the host block table into every layer's cache leaf."""
         t = jnp.asarray(self._table)
@@ -355,6 +410,10 @@ class Engine:
             rows = {k: sc[k][0] for k in KV.QUANT_KEYS}
             self.caches["tail"][i] = KV.write_prefill_rows(pc, rows, ids, n,
                                                            start=start)
+        if self._mesh is not None:
+            # eager scatter output sharding is compiler-chosen; pin the
+            # pool back to its canonical mesh layout (pure relayout)
+            self.caches = self._shard_caches(self.caches)
 
     def _cow_copy(self, src: int, dst: int, n_rows: int):
         """Copy the first `n_rows` rows of pool page `src` into the
@@ -371,6 +430,8 @@ class Engine:
         self.caches["groups"]["p0"] = dict(g, **g2)
         for i, pc in enumerate(self.caches["tail"]):
             self.caches["tail"][i] = dict(pc, **copy_group(pc))
+        if self._mesh is not None:
+            self.caches = self._shard_caches(self.caches)
         self.cow_copies += 1
 
     def _load_prefix_to_staging(self, req: Request):
@@ -397,6 +458,8 @@ class Engine:
         for i, (pc, sc) in enumerate(zip(self.caches["tail"],
                                          self._staging["tail"])):
             self._staging["tail"][i] = dict(sc, **gather_group(pc, sc))
+        if self._mesh is not None:
+            self._unshard_staging()
 
     # -- lifecycle ---------------------------------------------------------
 
@@ -603,10 +666,11 @@ class Engine:
         live, tokens, positions, rids = self._live_batch()
         if not live:
             return 0
-        nxt, self.caches = self._decode_fn(
-            self.params, {"tokens": jnp.asarray(tokens),
-                          "index": jnp.asarray(positions)}, self.caches,
-            jnp.asarray(rids))
+        with self._tp_scope():
+            nxt, self.caches = self._decode_fn(
+                self.params, {"tokens": jnp.asarray(tokens),
+                              "index": jnp.asarray(positions)}, self.caches,
+                jnp.asarray(rids))
         nxt = np.asarray(nxt)
         for r in live:
             tok = int(nxt[r.slot])
@@ -636,17 +700,19 @@ class Engine:
         pos = jnp.asarray(positions)
         rid_arr = jnp.asarray(rids)
         cur, drafts, draft_probs = toks, [], []
-        for i in range(k):
-            d, q, self.caches = self._draft_fn(
-                self.params, {"tokens": cur, "index": pos + i},
-                self.caches, rid_arr)
-            drafts.append(d)
-            draft_probs.append(q)
-            cur = d[:, None]
-        drafts = jnp.stack(drafts, axis=1)                   # (B, k)
-        logits, self.caches = self._verify_fn(
-            self.params, {"tokens": jnp.concatenate([toks, drafts], axis=1),
-                          "index": pos}, self.caches)
+        with self._tp_scope():
+            for i in range(k):
+                d, q, self.caches = self._draft_fn(
+                    self.params, {"tokens": cur, "index": pos + i},
+                    self.caches, rid_arr)
+                drafts.append(d)
+                draft_probs.append(q)
+                cur = d[:, None]
+            drafts = jnp.stack(drafts, axis=1)               # (B, k)
+            logits, self.caches = self._verify_fn(
+                self.params,
+                {"tokens": jnp.concatenate([toks, drafts], axis=1),
+                 "index": pos}, self.caches)
         emitted, acc = self._accept_fn(
             drafts, None if self.sampler.greedy
             else jnp.stack(draft_probs, axis=1), logits, rid_arr, pos)
@@ -805,6 +871,27 @@ class Engine:
             "temperature": self.sampler.temperature,
             **kv,
         }
+        rep["tp"] = self.tp
+        if self.ecfg.tp > 1:
+            rep["tp_requested"] = self.ecfg.tp
+            if self.tp_fallback:
+                rep["tp_fallback_reason"] = self.tp_fallback
+        if self.tp > 1:
+            # wire + residency accounting from the *actual device
+            # arrays*, not the bytes model: one decode step all-gathers
+            # each layer's pool shards, so each device receives
+            # (tp-1)/tp of the codes+scales pool per layer
+            g = self.caches["groups"]["p0"]
+            pool_layer = sum(int(g[k].nbytes)
+                             for k in KV.QUANT_KEYS) // self._n_groups
+            f32_layer = 2 * 4 * (self.ecfg.n_pages * self.ecfg.page_size
+                                 * self.cfg.n_kv_heads * self.cfg.hd)
+            frac = (self.tp - 1) / self.tp
+            rep.update({
+                "tp_wire_bytes_per_step_layer": int(frac * pool_layer),
+                "tp_wire_reduction_vs_f32": f32_layer / pool_layer,
+                "pool_bytes_per_device": kv["paged_bytes"] // self.tp,
+            })
         if self.spec is not None:
             # re-describe like the decode plan above: the report states
             # which kernel drafted and which verified
@@ -888,4 +975,13 @@ def format_report(rep: dict, policy: str) -> str:
            f"{rep['prefix_cow_copies']} CoW copies; "
            f"{rep['resident_prefix_pages']} resident pages "
            f"({rep['resident_prefix_bytes'] / mb:.2f} MB at format width)"
-           if "prefix_hit_rate" in rep else ""))
+           if "prefix_hit_rate" in rep else "")
+        + (f"\ntp: {rep['tp']} devices on \"model\", pool "
+           f"{rep['pool_bytes_per_device'] / mb:.2f} MB/device; wire "
+           f"{rep['tp_wire_bytes_per_step_layer'] / 1e3:.1f} KB "
+           f"codes+scales per step/layer "
+           f"({rep['tp_wire_reduction_vs_f32']:.1f}x under an f32 wire)"
+           if rep.get("tp", 1) > 1 else "")
+        + (f"\ntp: requested {rep['tp_requested']}, serving replicated — "
+           f"{rep['tp_fallback_reason']}"
+           if "tp_fallback_reason" in rep else ""))

@@ -113,7 +113,8 @@ def run_engine(cfg, model, args):
                         max_pages_per_req=args.max_pages_per_req,
                         token_budget=args.token_budget,
                         prefill_chunk=args.prefill_chunk,
-                        prefix_cache=args.prefix_cache)
+                        prefix_cache=args.prefix_cache,
+                        tp=args.tp)
     spec = SpecConfig(args.spec_draft, args.spec_k) if args.spec_draft \
         else None
     spec_k = args.spec_k if spec else 0
@@ -167,6 +168,13 @@ def main(argv=None):
     eg.add_argument("--token-budget", type=int, default=32,
                     help="tokens per scheduler step")
     eg.add_argument("--prefill-chunk", type=int, default=16)
+    eg.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel width: shard the KV page pool "
+                         "across a (1, tp) \"model\" mesh and serve "
+                         "through the sharded exec-plan routes (bit-"
+                         "identical to --tp 1).  On CPU, expose devices "
+                         "with XLA_FLAGS=--xla_force_host_platform_"
+                         "device_count=N before launch")
     eg.add_argument("--requests", type=int, default=16)
     eg.add_argument("--rate", type=float, default=0.0,
                     help="Poisson arrival rate, req/s (0 = all at t=0)")

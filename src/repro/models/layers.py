@@ -25,6 +25,7 @@ from repro.core import exec_plan
 from repro.core import kvcache as KV
 from repro.core.linear import apply_linear, dpa_grouped_dot, init_linear
 from repro.core.policy import get_policy
+from repro.distributed import tp
 from repro.distributed.sharding import _ambient_mesh, maybe_shard
 from repro.models.decode_attn import flash_decode
 
@@ -211,7 +212,9 @@ def apply_attention(params, x, cfg, *, offset=0, cache=None, cross_kv=None,
                                           packed=policy.kv_packed)
         plan_ctx = dict(batch=B, page_size=cache["k_codes"].shape[1],
                         max_pages=cache["block_table"].shape[1],
-                        kv_heads=cfg.n_kv_heads, hd=hd)
+                        kv_heads=cfg.n_kv_heads, hd=hd,
+                        n_pages=cache["k_codes"].shape[0],
+                        n_devices=tp.axis_size())
         if Sq == 1:
             entry = exec_plan.resolve("paged_decode", policy, **plan_ctx)
         else:
@@ -645,6 +648,6 @@ def apply_unembed(params, x, *, table=None):
     dtype operands (the DPA contract; casting the whole table to f32
     costs a hoisted V*d f32 buffer — 4.6 GiB on qwen2)."""
     w = table if table is not None else params["table"]
-    out = jnp.einsum("bsd,vd->bsv", x, w.astype(x.dtype),
-                     preferred_element_type=jnp.float32)
+    entry = exec_plan.resolve("unembed", None, size=x.shape[-2] * w.shape[0])
+    out = entry.run(x, w, get_policy("fp32"))
     return maybe_shard(out, "data", None, "model")

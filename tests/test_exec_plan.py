@@ -134,7 +134,8 @@ def test_describe_reports_predicates_and_bytes():
     assert d["route"] == "pallas_block_table"
     assert d["predicates"] == {"kv_quantized": True, "not_disabled": True}
     assert d["bytes_moved"] > 0
-    assert set(d["candidates"]) == {"pallas_block_table", "jnp_gather"}
+    assert set(d["candidates"]) == {"pallas_block_table", "jnp_gather",
+                                    "paged_decode_sharded"}
     # the gather fallback re-materializes the view: strictly more bytes
     gather = exec_plan.route("paged_decode", "jnp_gather")
     assert gather.bytes_moved(
@@ -176,6 +177,17 @@ def test_every_route_reachable(monkeypatch):
         seen["quantize_pack"].add(
             exec_plan.resolve("quantize_pack", None, fmt=fmt, pack=pack).name)
     seen["quantize_pack"].add("xla_quantize")   # reference, pinned below
+    # multi-device contexts select the sharded serving routes and the
+    # wire-compressed allreduce (executed by the multi-device CI lane)
+    seen["paged_decode"].add(
+        exec_plan.resolve("paged_decode", "kv4_attn8_packed",
+                          n_devices=8).name)
+    seen["verify_attn"].add(
+        exec_plan.resolve("verify_attn", "kv4_attn8_packed", sq=4,
+                          n_devices=8).name)
+    seen["allreduce"].add(
+        exec_plan.resolve("allreduce", None, wire_fmt="fp8_e4m3",
+                          n_devices=8).name)
     for op in exec_plan.ops():
         registered = {e.name for e in exec_plan.candidates(op)}
         missing = registered - seen[op]
@@ -303,6 +315,15 @@ def test_selection_pin_table():
         ("flash_attn", "fp32", dict(sq=1, skv=16, use_flash=True),
          "xla_ref_attn"),
         ("paged_decode", "kv4_attn8_packed", {}, "pallas_block_table"),
+        ("paged_decode", "kv4_attn8_packed", dict(n_devices=8),
+         "paged_decode_sharded"),
+        ("verify_attn", "kv4_attn8_packed", dict(sq=4), "jnp_gather"),
+        ("verify_attn", "kv4_attn8_packed", dict(sq=4, n_devices=8),
+         "verify_attn_sharded"),
+        ("allreduce", None, dict(wire_fmt="fp8_e4m3", n_devices=8),
+         "wire_compressed"),
+        ("allreduce", None, dict(n_devices=1), "xla_psum_f32"),
+        ("unembed", None, {}, "xla_tied_table"),
         ("quantize_pack", None, dict(fmt="fp4_e2m1", pack=True),
          "pallas_quantize_pack"),
     ]

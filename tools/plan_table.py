@@ -8,7 +8,14 @@ backend, priority, reference fallback + pinned tolerance, and the tests
   - every registered route names at least one test;
   - every named test file exists, and a ``file::name`` entry names a
     test function actually defined in that file (parametrized variants
-    match by prefix).
+    match by prefix);
+  - every route whose predicate requires ``n_devices > 1`` (the sharded
+    serving routes, the wire-compressed allreduce) names at least one
+    test in the multi-device suite (`tests/test_distributed.py` /
+    `tests/test_tp_*.py`), which the CI multidevice job runs under
+    `XLA_FLAGS=--xla_force_host_platform_device_count=8` — a sharded
+    route pinned only by single-device tests would never actually cross
+    a device boundary in CI.
 
 Run by the CI docs job (alongside `tools/check_docs.py`), so registering
 a kernel route without pinning it to a test fails CI the same way a
@@ -40,6 +47,27 @@ def _test_exists(ref: str) -> bool:
     return re.search(rf"^def {re.escape(name)}\b", text, re.M) is not None
 
 
+def _is_multidevice_test(ref: str) -> bool:
+    path = ref.partition("::")[0]
+    base = os.path.basename(path)
+    return base == "test_distributed.py" or base.startswith("test_tp_")
+
+
+def _requires_multidevice(entry) -> bool:
+    """True when the route's predicate gates on n_devices > 1: eligible
+    in an 8-device context but not a 1-device one, everything else held
+    permissive."""
+    from repro.core.policy import get_policy
+    pol = get_policy("kv4_attn8_packed")
+    base = dict(wire_fmt="fp8_e4m3", sq=4)
+    try:
+        one = entry.predicate(pol, dict(base, n_devices=1))
+        many = entry.predicate(pol, dict(base, n_devices=8))
+    except Exception:
+        return False
+    return all(many.values()) and not all(one.values()) and one != many
+
+
 def collect():
     from repro.core import exec_plan
     rows, errors = [], []
@@ -51,6 +79,12 @@ def collect():
             for t in e.tests:
                 if not _test_exists(t):
                     errors.append(f"{op}/{e.name}: test {t!r} not found")
+            if e.tests and _requires_multidevice(e) \
+                    and not any(_is_multidevice_test(t) for t in e.tests):
+                errors.append(
+                    f"{op}/{e.name}: predicate requires n_devices > 1 but "
+                    "no named test is in the multi-device suite "
+                    "(tests/test_distributed.py or tests/test_tp_*.py)")
     return rows, errors
 
 
