@@ -309,7 +309,83 @@ def tp_collective_bytes():
              f"tokens_per_s={rep['tokens_per_s']:.1f}")]
 
 
+def tuned_vs_static():
+    """Tuned resolution vs static priority, over the shipped CI DB.
+
+      db_ratio : min over the shipped DB's (op, policy, shape-class)
+          keys of us(static-priority config) / us(tuned selection).
+          >= 1.0 *by construction* — the tuned selection is the argmin
+          over a measured pool that always contains the static config
+          (every knob grid includes the defaults) — so the gate pins
+          the invariant: a tuned table never selects a measured-slower
+          config on any CI shape-class.  keys counts the shape-classes
+          covered (drops mean the smoke sweep lost coverage).
+      tuned_vs_static : live re-measure of the shape-class where the DB
+          disagrees with priority order the most, resolved tuned vs
+          static — a loose CPU tripwire that the consult actually
+          changes what runs.
+    """
+    import os
+    import time
+
+    import jax
+
+    from repro.core import exec_plan
+    from repro.runtime import tuner
+
+    db_path = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "tuned", "ci_default.json")
+    db = tuner.load_db(db_path)
+    keys = sorted({(r["op"], r["policy"], r["shape_class"])
+                   for r in db["records"].values()
+                   if r["op"] != tuner.ENGINE_OP})
+    ratios = {}
+    for op, preset, cls in keys:
+        pol = get_policy(preset)
+        sc = tuner.shape_class(op, cls)
+        static = exec_plan.resolve(op, pol, **sc.rep)
+        pool = [r for r in db["records"].values()
+                if (r["op"], r["policy"], r["shape_class"])
+                == (op, preset, cls)]
+        static_rec = [r for r in pool if r["route"] == static.name
+                      and not r.get("knobs")]
+        best = tuner._best_record(db, op, tuner.policy_key(pol), cls)
+        if static_rec and best:
+            ratios[(op, preset, cls)] = static_rec[0]["us"] / best["us"]
+    db_ratio = min(ratios.values())
+    # live tripwire at the key the DB reorders hardest
+    op, preset, cls = max(ratios, key=ratios.get)
+    pol = get_policy(preset)
+    sc = tuner.shape_class(op, cls)
+    args, kwargs = tuner._cutout(op, cls, pol)
+
+    def timed(entry, reps=3):
+        jax.block_until_ready(entry.run(*args, **kwargs))   # compile
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            out = entry.run(*args, **kwargs)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / reps * 1e6
+
+    prior = exec_plan.resolve(op, pol, **sc.rep)
+    saved = os.environ.get("REPRO_TUNED_DB")
+    try:
+        os.environ["REPRO_TUNED_DB"] = db_path
+        tuner.clear_caches()
+        tuned = exec_plan.resolve(op, pol, **sc.rep)
+        us_tuned, us_static = timed(tuned), timed(prior)
+    finally:
+        if saved is None:
+            os.environ.pop("REPRO_TUNED_DB", None)
+        else:
+            os.environ["REPRO_TUNED_DB"] = saved
+        tuner.clear_caches()
+    return [("engine/tuned_vs_static", us_tuned,
+             f"db_ratio={db_ratio:.3f}x keys={float(len(ratios)):.0f}x "
+             f"tuned_vs_static={us_static / us_tuned:.2f}x")]
+
+
 ALL = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather,
-       spec_decode, prefix_cache, tp_collective_bytes]
+       spec_decode, prefix_cache, tp_collective_bytes, tuned_vs_static]
 SMOKE = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather,
-         spec_decode, prefix_cache, tp_collective_bytes]
+         spec_decode, prefix_cache, tp_collective_bytes, tuned_vs_static]

@@ -17,6 +17,17 @@ in `core.linear`, `models.layers`, `models.decode_attn`, and
 (policy, shapes) and run it — adding a kernel is one `register()` call,
 not a cross-cutting edit.
 
+Measured tuning: when `REPRO_TUNED_DB` names a measurement database
+(built by `tools/tune.py`; see `repro.runtime.tuner`), `resolve`
+consults it *after* computing the static priority-order choice — the
+untuned prior.  A tuned selection may only move the resolution within
+the prior's reference family (routes pinned against the same fallback),
+so any tuned table preserves the table's numerics contract; unmeasured
+(op, policy, shape-class) keys, ineligible tuned routes, and corrupt DB
+entries all fall back to the prior.  `REPRO_TUNED=0` is the kill
+switch.  `describe()` states whether a resolution was ``tuned`` or
+``prior``.
+
 Ops routed here:
 
   matmul          x @ w under the DPA contract (`core.linear.dpa_dot`)
@@ -41,6 +52,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
+import os
 from typing import Callable, Optional
 
 from .policy import get_policy
@@ -62,6 +74,10 @@ class PlanEntry:
     `tests/test_exec_plan.py` enforces the pin for every route).
     `tests` names the tier-1 tests exercising the route —
     `tools/plan_table.py` fails CI when a registered route names none.
+    `knobs` names the tunable keyword arguments the route's `run`
+    exposes (kernel block shapes); `repro.runtime.tuner` sweeps them and
+    `tools/plan_table.py --check` fails CI when a run signature exposes
+    a knob the tuner's config space does not know.
     """
     op: str
     name: str
@@ -74,16 +90,27 @@ class PlanEntry:
     bytes_moved: Optional[Callable] = None   # (policy, ctx) -> int
     tests: tuple = ()
     note: str = ""
+    knobs: tuple = ()                  # tunable kwarg names of `run`
+    # -- tuned-resolution provenance (set only on entries minted by the
+    #    tuner; registered table rows always carry the defaults) --
+    tuned: bool = False
+    tuned_class: str = ""              # shape-class the measurement keyed on
+    tuned_knobs: tuple = ()            # sorted ((knob, value), ...) applied
 
     def eligible(self, policy, ctx) -> bool:
         return all(self.predicate(policy, ctx).values())
 
     def describe(self, policy, ctx) -> dict:
         bm = self.bytes_moved(policy, ctx) if self.bytes_moved else None
-        return {"op": self.op, "route": self.name, "backend": self.backend,
-                "predicates": self.predicate(policy, ctx),
-                "bytes_moved": bm, "reference": self.reference,
-                "tol": self.tol}
+        d = {"op": self.op, "route": self.name, "backend": self.backend,
+             "predicates": self.predicate(policy, ctx),
+             "bytes_moved": bm, "reference": self.reference,
+             "tol": self.tol,
+             "selection": "tuned" if self.tuned else "prior"}
+        if self.tuned:
+            d["shape_class"] = self.tuned_class
+            d["tuned_knobs"] = dict(self.tuned_knobs)
+        return d
 
 
 _TABLE: dict[str, list[PlanEntry]] = {}
@@ -94,7 +121,7 @@ def register(op: str, name: str, *, backend: str, run: Callable,
              predicate: Callable = None, priority: int = 0,
              reference: Optional[str] = None, tol: float = 0.0,
              bytes_moved: Optional[Callable] = None, tests: tuple = (),
-             note: str = "") -> PlanEntry:
+             note: str = "", knobs: tuple = ()) -> PlanEntry:
     """Add one route to the table (kernel modules call this at import).
 
     Duplicate (op, name) registrations are an error — the table is the
@@ -106,7 +133,7 @@ def register(op: str, name: str, *, backend: str, run: Callable,
                       predicate=predicate or (lambda policy, ctx: {}),
                       priority=priority, reference=reference, tol=tol,
                       bytes_moved=bytes_moved, tests=tuple(tests),
-                      note=note)
+                      note=note, knobs=tuple(knobs))
     rows.append(entry)
     rows.sort(key=lambda e: (-e.priority, e.name))
     return entry
@@ -155,15 +182,39 @@ def resolve(op: str, policy=None, **ctx) -> PlanEntry:
 
     `ctx` carries the static shape/alignment facts the predicates gate
     on (all python ints/bools/strs, so resolution is trace-time-stable
-    under jit).  Raises `PlanError` — with every candidate's predicate
+    under jit).  When `REPRO_TUNED_DB` is set the measurement database
+    may override the static choice within its reference family (see the
+    module docstring); without it resolution is exactly the priority
+    scan.  Raises `PlanError` — with every candidate's predicate
     results — when nothing can serve the request."""
     policy = get_policy(policy if policy is not None else "fp32")
     for entry in candidates(op):
         if entry.eligible(policy, ctx):
-            return entry
+            tuned = _tuned_choice(op, policy, ctx, entry)
+            return tuned if tuned is not None else entry
     tried = {e.name: e.predicate(policy, ctx) for e in _TABLE[op]}
     raise PlanError(f"no {op} route serves policy={policy} ctx={ctx}; "
                     f"predicates: {tried}")
+
+
+def _tuned_choice(op: str, policy, ctx: dict, static: PlanEntry):
+    """Consult the measurement DB for (op, policy, ctx); None -> prior.
+
+    Every failure mode — no DB, kill switch, unmeasured key, unknown or
+    ineligible tuned route, corrupt DB — degrades to the static prior;
+    tuning must never make a resolvable request unresolvable."""
+    if os.environ.get("REPRO_TUNED", "1") == "0":
+        return None
+    db_path = os.environ.get("REPRO_TUNED_DB", "")
+    if not db_path:
+        return None
+    from repro.runtime import tuner
+    try:
+        return tuner.tuned_entry(db_path, op, policy, ctx, static)
+    except Exception as exc:  # noqa: BLE001 — corrupt DB must not break resolve
+        tuner.warn_once(f"tuned lookup failed for {op}: {exc!r}; "
+                        "falling back to priority order")
+        return None
 
 
 def describe(op: str, policy=None, **ctx) -> dict:

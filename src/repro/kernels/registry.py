@@ -118,7 +118,8 @@ exec_plan.register(
     bytes_moved=_mm_operand_bytes,
     tests=("tests/test_kernels.py::test_fused_quantize_matmul_vs_ref",
            "tests/test_kernels.py::test_packed_fused_policy_wrapper"),
-    note="in-kernel activation quantize, per-(row, K-block) scales")
+    note="in-kernel activation quantize, per-(row, K-block) scales",
+    knobs=("bm", "bk", "bn"))
 
 exec_plan.register(
     "matmul", "pallas_prequant", backend="pallas",
@@ -132,7 +133,8 @@ exec_plan.register(
     bytes_moved=_mm_operand_bytes,
     tests=("tests/test_kernels.py::test_dpa_matmul_vs_ref",
            "tests/test_kernels.py::test_dpa_matmul_policy_wrapper_padding"),
-    note="XLA quantize pass, packed fp4 operand bytes when policy.packed")
+    note="XLA quantize pass, packed fp4 operand bytes when policy.packed",
+    knobs=("bm", "bk", "bn"))
 
 exec_plan.register(
     "matmul", "xla_fake_quant", backend="xla", run=_mm_fake_quant,
@@ -201,20 +203,32 @@ exec_plan.register(
 # flash_attn: full-sequence attention (models.layers._sdpa)
 # -----------------------------------------------------------------------------
 
+def _fit_block(b, s):
+    """Largest block <= b that divides the sequence length — tuned
+    block shapes must never break the flash kernels' divisibility
+    contract (Sq % bq == 0), whatever the sweep proposes."""
+    b = max(1, min(b, s))
+    while s % b:
+        b -= 1
+    return b
+
+
 def _fa_pallas_dpa(q, k, v, *, policy, causal, window, offset, valid,
-                   scale, kv_on_grid):
+                   scale, kv_on_grid, bq=128, bk=128):
     out = kops.dpa_flash_attention(
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
         v.transpose(0, 2, 1, 3), fmt=policy.fmt_attn, fmt_kv=_kv_fmt(policy),
-        causal=causal, window=window)
+        causal=causal, window=window,
+        bq=_fit_block(bq, q.shape[1]), bk=_fit_block(bk, k.shape[1]))
     return out.transpose(0, 2, 1, 3)
 
 
 def _fa_pallas_f32(q, k, v, *, policy, causal, window, offset, valid,
-                   scale, kv_on_grid):
+                   scale, kv_on_grid, bq=128, bk=128):
     out = kops.flash_attention(
         q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
-        v.transpose(0, 2, 1, 3), causal=causal, window=window)
+        v.transpose(0, 2, 1, 3), causal=causal, window=window,
+        bq=_fit_block(bq, q.shape[1]), bk=_fit_block(bk, k.shape[1]))
     return out.transpose(0, 2, 1, 3)
 
 
@@ -250,7 +264,8 @@ exec_plan.register(
     tests=("tests/test_attention_dpa.py::test_dpa_flash_attention_vs_spec",
            "tests/test_exec_plan.py::test_route_pinned_to_reference"),
     note="online-softmax tiling; tol vs the global-softmax jnp fallback "
-         "is the blocked-p-quantization budget test_attention_dpa pins")
+         "is the blocked-p-quantization budget test_attention_dpa pins",
+    knobs=("bq", "bk"))
 
 exec_plan.register(
     "flash_attn", "pallas_f32_flash", backend="pallas", run=_fa_pallas_f32,
@@ -258,7 +273,7 @@ exec_plan.register(
     predicate=lambda policy, ctx: dict(
         _fa_common_bits(policy, ctx), f32_attn=not policy.attn_enabled),
     tests=("tests/test_kernels.py::test_flash_attention_vs_ref",),
-    note="the seed f32 flash kernel")
+    note="the seed f32 flash kernel", knobs=("bq", "bk"))
 
 exec_plan.register(
     "flash_attn", "xla_dpa_attn", backend="xla", run=_fa_xla_dpa,
@@ -466,7 +481,8 @@ def _qp_pallas(x, *, fmt, pack, bm):
     return kops.quantize_rows_pallas(x, fmt=fmt, pack=pack, bm=bm)
 
 
-def _qp_xla(x, *, fmt, pack, bm):
+def _qp_xla(x, *, fmt, pack, **_):
+    # swallows bm: the reference quantizer has no tiling to tune
     q, s = kref.quantize_rows_ref(x, fmt=fmt)
     if pack:
         q = pack_fp4_axis(q, 1)
@@ -479,14 +495,15 @@ exec_plan.register(
     predicate=lambda policy, ctx: {"fp4": ctx.get("fmt") == "fp4_e2m1",
                                    "pack": ctx.get("pack", False)},
     tests=("tests/test_kernels.py::test_quantize_pack_rows_matches_unpacked",),
-    note="absmax -> E2M1 cast -> nibble pack, one kernel")
+    note="absmax -> E2M1 cast -> nibble pack, one kernel",
+    knobs=("bm",))
 
 exec_plan.register(
     "quantize_pack", "pallas_quantize_rows", backend="pallas",
     run=_qp_pallas, priority=10, reference="xla_quantize", tol=1e-6,
     predicate=lambda policy, ctx: {"unpacked": not ctx.get("pack", False)},
     tests=("tests/test_kernels.py::test_quantize_rows_vs_ref",),
-    note="fused absmax + cast row quantizer")
+    note="fused absmax + cast row quantizer", knobs=("bm",))
 
 exec_plan.register(
     "quantize_pack", "xla_quantize", backend="xla", run=_qp_xla, priority=0,

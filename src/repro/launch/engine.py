@@ -867,6 +867,7 @@ class Engine:
             "p50_ttft_s": float(np.percentile(ttft, 50)) if len(ttft) else 0.0,
             "decode_route": self.plan["route"],
             "decode_backend": self.plan["backend"],
+            "decode_selection": self.plan["selection"],
             "decode_bytes_per_step_layer": self.plan["bytes_moved"],
             "temperature": self.sampler.temperature,
             **kv,
@@ -958,7 +959,7 @@ def format_report(rep: dict, policy: str) -> str:
         f"page util peak {rep['page_util']:.0%} "
         f"({rep['pages_peak']}/{rep['pages_total']} pages)\n"
         f"plan: decode via {rep['decode_route']} "
-        f"[{rep['decode_backend']}], "
+        f"[{rep['decode_backend']}, {rep['decode_selection']}], "
         f"{rep['decode_bytes_per_step_layer'] / 1e3:.1f} KB KV moved "
         "per step/layer"
         + (f"\nspec: draft k={rep['spec_k']} under "

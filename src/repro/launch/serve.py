@@ -28,6 +28,7 @@ Two modes:
 from __future__ import annotations
 
 import argparse
+import os
 import time
 
 import jax
@@ -108,6 +109,24 @@ def run_engine(cfg, model, args):
     from repro.launch.engine import (Engine, EngineConfig, SamplerConfig,
                                      SpecConfig, format_report,
                                      synthetic_workload)
+    if args.tuned_db:
+        # export first so every exec_plan.resolve() below (engine
+        # construction included) consults the measured table
+        os.environ["REPRO_TUNED_DB"] = args.tuned_db
+        from repro.runtime import tuner
+        best = tuner.best_engine_knobs(args.tuned_db)
+        if best:
+            ps = int(best.get("page_size", args.page_size))
+            if ps != args.page_size:
+                # rescale the per-request page budget so S_max (tokens a
+                # request may hold) is preserved under the tuned page size
+                s_max = args.page_size * args.max_pages_per_req
+                args.max_pages_per_req = max(1, s_max // ps)
+                args.page_size = ps
+            if not args.spec_draft and int(best.get("spec_k", 0)) > 0:
+                args.spec_draft = tuner.ENGINE_DRAFT_POLICY
+                args.spec_k = int(best["spec_k"])
+            print(f"tuned engine knobs from {args.tuned_db}: {best}")
     ecfg = EngineConfig(page_size=args.page_size, n_pages=args.pages,
                         max_batch=args.max_batch or args.batch,
                         max_pages_per_req=args.max_pages_per_req,
@@ -188,6 +207,13 @@ def main(argv=None):
                          "to every synthetic request")
     eg.add_argument("--json", default="",
                     help="also dump the engine report to this JSON file")
+    eg.add_argument("--tuned-db", default="",
+                    help="tuned measurement DB (tools/tune.py output): "
+                         "exports REPRO_TUNED_DB so exec-plan routes "
+                         "resolve against measurements, and applies the "
+                         "DB's best engine knobs: page size (with "
+                         "--max-pages-per-req rescaled to keep S_max) "
+                         "and spec-k (when --spec-draft is unset)")
     sg = ap.add_argument_group("sampling + speculation", "engine mode")
     sg.add_argument("--temperature", type=float, default=0.0,
                     help="sampling temperature (0 = greedy argmax)")

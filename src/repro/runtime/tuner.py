@@ -1,0 +1,657 @@
+"""Measurement-driven autotuner over the execution plan.
+
+The paper's thesis is one reconfigurable datapath picking the right
+precision/width configuration per operation instead of hard-wiring it;
+the software analogue of the *choosing* is here.  `core.exec_plan`
+resolves routes by static priority and the kernels run hand-chosen
+block shapes — this module replaces both constants with measurements,
+in the style of dace's distributed cutout tuner:
+
+  1. `enumerate_space()` builds the config space per (op, policy,
+     shape-class): every route the priority order could defensibly pick
+     (eligible at the class's representative shapes AND inside the
+     static choice's reference family) x the route's declared knob grid
+     (`PlanEntry.knobs` — kernel block shapes), plus an engine-level
+     pseudo-op sweeping page size and speculative k.
+  2. `run_sweep()` benchmarks each config as an isolated cutout: the
+     op's inputs synthesized at the class's representative shapes,
+     warmed once (compile), then timed under `jax.block_until_ready`.
+     Results land in a JSON measurement database keyed by
+     `config_hash()` — a content hash of (config, shape-class, backend,
+     jax version) — so already-measured cutouts are skipped and the
+     sweep shards across workers (`shard_of(hash, n) == i`).
+  3. `tuned_entry()` is the `resolve()` consult (env `REPRO_TUNED_DB`,
+     kill switch `REPRO_TUNED=0`): classify the live ctx into a
+     shape-class, take the fastest measured record for (op, policy-key,
+     class), and mint a `PlanEntry` that runs the measured route with
+     the measured knobs.  The static priority order stays the untuned
+     prior: unmeasured keys, unknown/ineligible/out-of-family routes,
+     and corrupt DB entries all fall back to it with a warning.
+
+The selection-invariance contract (pinned by `tests/test_tuner.py`): a
+tuned DB can only *reorder* among routes whose reference pins already
+pass — `_family(entry) = {name, reference}` must intersect the static
+choice's family — so any tuned table preserves the plan's numerics,
+and bit-pinned ops (paged_decode, verify_attn) stay bit-identical with
+tuning on or off.
+
+DB schema (`version` 1)::
+
+    {"version": 1,
+     "meta":    {"backend": ..., "jax_version": ...},   # informational
+     "records": {<config_hash>: {"op", "policy", "policy_key",
+                                 "shape_class", "route", "knobs",
+                                 "backend", "jax_version",
+                                 "us", "reps"}}}
+
+`tools/tune.py` is the CLI; `benchmarks/tuned/` ships defaults for the
+CI shape-classes; `docs/tuning.md` documents the workflow.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import time
+import warnings
+from typing import Callable, Optional
+
+SCHEMA_VERSION = 1
+
+# -- knob grids ---------------------------------------------------------------
+# Every grid includes the static default (the kernels' hand-chosen
+# constants), so the untuned configuration is always among the measured
+# candidates and tuned-vs-static is >= 1.0x by construction on the
+# shapes the sweep covered.
+DEFAULT_KNOBS = {"bm": 128, "bk": 128, "bn": 128, "bq": 128}
+KNOB_GRID = {
+    "bm": (32, 64, 128),
+    "bk": (64, 128),
+    "bn": (64, 128),
+    "bq": (32, 64, 128),
+}
+SMOKE_KNOB_GRID = {
+    "bm": (32, 128),
+    "bk": (128,),
+    "bn": (128,),
+    "bq": (32, 128),
+}
+
+# -- the engine pseudo-op -----------------------------------------------------
+# Page size and speculative draft length are engine-construction knobs,
+# not per-op kwargs, so they tune as one whole-engine cutout (a reduced
+# qwen3-4b serving a fixed synthetic workload; `synthetic_workload` is
+# seed-deterministic, which tests/test_tuner.py pins).
+ENGINE_OP = "engine"
+ENGINE_ROUTE = "engine_step"
+ENGINE_SHAPE_CLASS = "engine_ci"
+ENGINE_POLICY = "kv4_attn8_packed"
+ENGINE_DRAFT_POLICY = "w4a4_kv4_attn4"
+ENGINE_POOL_ROWS = 384          # page_size * n_pages held constant
+ENGINE_SEQ_ROWS = 48            # page_size * max_pages_per_req constant
+ENGINE_KNOB_GRID = {"page_size": (8, 16), "spec_k": (0, 2, 4)}
+SMOKE_ENGINE_KNOB_GRID = {"page_size": (8, 16), "spec_k": (0,)}
+
+
+# -- shape classes ------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeClass:
+    """One equivalence class of resolve() contexts.
+
+    `match(ctx)` decides membership at resolve time; `rep` is both the
+    representative resolve-ctx the sweep filters eligibility against
+    and the shape the cutout synthesizes inputs at."""
+    op: str
+    name: str
+    match: Callable
+    rep: dict
+
+
+SHAPE_CLASSES = (
+    ShapeClass("matmul", "gemm_decode",
+               lambda ctx: ctx.get("m") is not None
+               and 0 < ctx["m"] <= 16,
+               dict(w_dtype="float32", m=8, k=128, n=128)),
+    ShapeClass("matmul", "gemm_prefill",
+               lambda ctx: ctx.get("m") is not None and ctx["m"] > 16,
+               dict(w_dtype="float32", m=128, k=128, n=128)),
+    ShapeClass("flash_attn", "flash_prefill",
+               lambda ctx: ctx.get("sq", 1) > 1
+               and not ctx.get("has_valid", False),
+               dict(sq=32, skv=32, use_flash=True, has_valid=False,
+                    kv_on_grid=False)),
+    ShapeClass("paged_decode", "paged_single",
+               lambda ctx: ctx.get("n_devices", 1) <= 1,
+               dict(batch=4, page_size=8, max_pages=6, kv_heads=2, hd=16,
+                    n_pages=48, n_devices=1)),
+    ShapeClass("verify_attn", "verify_paged",
+               lambda ctx: ctx.get("n_devices", 1) <= 1,
+               dict(batch=2, sq=4, page_size=8, max_pages=6, kv_heads=2,
+                    hd=16, n_pages=48, n_devices=1)),
+    ShapeClass("quantize_pack", "qp_fp4_pack",
+               lambda ctx: ctx.get("fmt") == "fp4_e2m1"
+               and ctx.get("pack", False),
+               dict(fmt="fp4_e2m1", pack=True)),
+    ShapeClass("quantize_pack", "qp_rows",
+               lambda ctx: not ctx.get("pack", False),
+               dict(fmt="fp8_e4m3", pack=False)),
+)
+
+# policies whose CI shapes the sweep measures, per op (quantize_pack
+# routes ignore the policy — the ctx fmt/pack bits drive them)
+OP_POLICIES = {
+    "matmul": ("fp8_dpa_fused", "fp4_dpa_packed"),
+    "flash_attn": ("attn_fp8_dpa", "fp32"),
+    "paged_decode": ("kv4_attn8_packed",),
+    "verify_attn": ("kv4_attn8_packed",),
+    "quantize_pack": ("fp32",),
+}
+
+
+def classify(op: str, ctx: dict) -> Optional[str]:
+    """Shape-class name for a live resolve ctx; None -> untuned prior."""
+    for sc in SHAPE_CLASSES:
+        if sc.op == op and sc.match(ctx):
+            return sc.name
+    return None
+
+
+def shape_class(op: str, name: str) -> ShapeClass:
+    for sc in SHAPE_CLASSES:
+        if sc.op == op and sc.name == name:
+            return sc
+    raise KeyError(f"no shape class {op}/{name}")
+
+
+# -- hashing ------------------------------------------------------------------
+
+def policy_key(policy) -> str:
+    """Stable 12-hex digest of a policy's full field set (preset names
+    can drift; the fields are the semantics)."""
+    from repro.core.policy import get_policy
+    pol = get_policy(policy if policy is not None else "fp32")
+    blob = json.dumps(dataclasses.asdict(pol), sort_keys=True,
+                      separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:12]
+
+
+HASH_FIELDS = ("op", "policy_key", "shape_class", "route", "knobs",
+               "backend", "jax_version")
+
+
+def config_hash(cfg) -> str:
+    """Content hash of one measurement key (16 hex chars).
+
+    Key-order and whitespace invariant: only HASH_FIELDS participate
+    and they serialize canonically (sorted keys, no spaces).  Accepts a
+    dict or its JSON serialization."""
+    if isinstance(cfg, str):
+        cfg = json.loads(cfg)
+    knobs = dict(cfg.get("knobs") or {})
+    canon = {"op": cfg["op"], "policy_key": cfg["policy_key"],
+             "shape_class": cfg["shape_class"], "route": cfg["route"],
+             "knobs": {k: knobs[k] for k in sorted(knobs)},
+             "backend": cfg.get("backend", ""),
+             "jax_version": cfg.get("jax_version", "")}
+    blob = json.dumps(canon, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()[:16]
+
+
+def shard_of(config_hash_hex: str, n_shards: int) -> int:
+    """Deterministic shard index: every worker computes the same
+    partition, each config lands in exactly one shard."""
+    return int(config_hash_hex, 16) % n_shards
+
+
+def env_fingerprint() -> dict:
+    import jax
+    return {"backend": jax.default_backend(), "jax_version": jax.__version__}
+
+
+# -- measurement database -----------------------------------------------------
+
+_WARNED: set = set()
+
+
+def warn_once(msg: str) -> None:
+    if msg not in _WARNED:
+        _WARNED.add(msg)
+        warnings.warn(msg, stacklevel=3)
+
+
+_REQUIRED_RECORD_FIELDS = ("op", "policy_key", "shape_class", "route", "us")
+
+
+def _valid_record(rec) -> bool:
+    if not isinstance(rec, dict):
+        return False
+    if any(f not in rec for f in _REQUIRED_RECORD_FIELDS):
+        return False
+    if not isinstance(rec["us"], (int, float)) or rec["us"] <= 0:
+        return False
+    if rec.get("knobs") is not None and not isinstance(rec["knobs"], dict):
+        return False
+    return True
+
+
+def load_db(path: str) -> dict:
+    """Read a measurement DB, tolerating damage: a corrupt file yields
+    an empty DB and corrupt/partial records are dropped — with one
+    warning each — never an exception (the `resolve()` contract)."""
+    db = {"version": SCHEMA_VERSION, "meta": {}, "records": {}}
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+    except FileNotFoundError:
+        return db
+    except (OSError, json.JSONDecodeError) as exc:
+        warn_once(f"tuned DB {path!r} unreadable ({exc!r}); "
+                  "treating as empty")
+        return db
+    if not isinstance(raw, dict) or not isinstance(raw.get("records"), dict):
+        warn_once(f"tuned DB {path!r} has no records table; "
+                  "treating as empty")
+        return db
+    db["meta"] = raw.get("meta") if isinstance(raw.get("meta"), dict) else {}
+    dropped = 0
+    for h, rec in raw["records"].items():
+        if _valid_record(rec):
+            db["records"][h] = rec
+        else:
+            dropped += 1
+    if dropped:
+        warn_once(f"tuned DB {path!r}: ignored {dropped} corrupt/partial "
+                  "record(s)")
+    return db
+
+
+def save_db(path: str, db: dict) -> None:
+    """Atomic write (tmp + rename): a killed sweep never leaves a
+    half-written DB for `resolve()` to trip on."""
+    d = os.path.dirname(os.path.abspath(path))
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"version": SCHEMA_VERSION, "meta": db.get("meta", {}),
+                   "records": db.get("records", {})},
+                  f, indent=1, sort_keys=True)
+        f.write("\n")
+    os.replace(tmp, path)
+
+
+_DB_CACHE: dict = {}
+
+
+def _load_db_cached(path: str, mtime_ns: int) -> dict:
+    key = (os.path.abspath(path), mtime_ns)
+    if key not in _DB_CACHE:
+        _DB_CACHE.clear()        # one live DB at a time is the use case
+        _DB_CACHE[key] = load_db(path)
+    return _DB_CACHE[key]
+
+
+# -- tuned selection (the resolve() consult) ----------------------------------
+
+def _family(entry) -> set:
+    """The reference family a route's numerics are pinned within."""
+    return {n for n in (entry.name, entry.reference) if n is not None}
+
+
+def _best_record(db: dict, op: str, pkey: str, cls: str):
+    """Fastest record for the key, preferring measurements from this
+    exact environment, then this backend, then anything; deterministic
+    tie-break by (us, route, knobs)."""
+    pool = [r for r in db["records"].values()
+            if r["op"] == op and r["policy_key"] == pkey
+            and r["shape_class"] == cls]
+    if not pool:
+        return None
+    fp = env_fingerprint()
+    exact = [r for r in pool if r.get("backend") == fp["backend"]
+             and r.get("jax_version") == fp["jax_version"]]
+    same_backend = [r for r in pool if r.get("backend") == fp["backend"]]
+    pool = exact or same_backend or pool
+    return min(pool, key=lambda r: (
+        r["us"], r["route"],
+        json.dumps(dict(r.get("knobs") or {}), sort_keys=True)))
+
+
+def _knobbed_run(base, knobs: dict) -> Callable:
+    def run(*args, **kw):
+        # knobs win over call-site defaults (callers pass e.g. bm=128
+        # explicitly; a plain partial would raise "multiple values")
+        return base.run(*args, **{**kw, **knobs})
+    return run
+
+
+_ENTRY_CACHE: dict = {}
+
+
+def tuned_entry(db_path: str, op: str, policy, ctx: dict, static):
+    """-> a tuned PlanEntry for (op, policy, ctx), or None for the
+    static prior.  Called by `exec_plan.resolve()`; every failure mode
+    degrades to None.  Minted entries are cached per (DB state, key),
+    so repeated resolutions return the identical object — resolution
+    stays deterministic under a tuned DB."""
+    cls = classify(op, ctx)
+    if cls is None:
+        return None
+    from repro.core.policy import get_policy
+    pol = get_policy(policy if policy is not None else "fp32")
+    pkey = policy_key(pol)
+    try:
+        mtime = os.stat(db_path).st_mtime_ns
+    except OSError:
+        warn_once(f"REPRO_TUNED_DB={db_path!r} not readable; "
+                  "using priority order")
+        return None
+    key = (os.path.abspath(db_path), mtime, op, cls, pkey, static.name)
+    if key in _ENTRY_CACHE:
+        cached = _ENTRY_CACHE[key]
+        if cached is None:
+            return None
+        # eligibility can shift under the same key (env kill switches
+        # like REPRO_PAGED_KERNEL) — re-check, fall back to the prior
+        return cached if cached.eligible(pol, ctx) else None
+    entry = _mint(db_path, op, pol, cls, pkey, static)
+    if entry is not None and not entry.eligible(pol, ctx):
+        # don't cache env-dependent ineligibility as a permanent None
+        _ENTRY_CACHE[key] = entry
+        return None
+    _ENTRY_CACHE[key] = entry
+    return entry
+
+
+def _mint(db_path, op, pol, cls, pkey, static):
+    import dataclasses as dc
+
+    from repro.core import exec_plan
+    db = _load_db_cached(db_path, os.stat(db_path).st_mtime_ns)
+    rec = _best_record(db, op, pkey, cls)
+    if rec is None:
+        return None
+    try:
+        base = exec_plan.route(op, rec["route"])
+    except exec_plan.PlanError:
+        warn_once(f"tuned DB names unknown route {op}/{rec['route']}; "
+                  "using priority order")
+        return None
+    if not (_family(base) & _family(static)):
+        warn_once(f"tuned route {op}/{base.name} is outside the static "
+                  f"choice's reference family ({static.name}); "
+                  "using priority order")
+        return None
+    knobs = dict(rec.get("knobs") or {})
+    unknown = sorted(set(knobs) - set(base.knobs))
+    if unknown:
+        warn_once(f"tuned record for {op}/{base.name} carries unknown "
+                  f"knob(s) {unknown}; ignoring them")
+        knobs = {k: v for k, v in knobs.items() if k in base.knobs}
+    run = _knobbed_run(base, knobs) if knobs else base.run
+    return dc.replace(base, run=run, tuned=True, tuned_class=cls,
+                      tuned_knobs=tuple(sorted(knobs.items())))
+
+
+def clear_caches() -> None:
+    """Drop the DB and minted-entry caches (tests; long-lived servers
+    that swap DBs in place)."""
+    _DB_CACHE.clear()
+    _ENTRY_CACHE.clear()
+    _WARNED.clear()
+
+
+# -- config-space enumeration -------------------------------------------------
+
+def _knob_combos(knob_names, grid):
+    """All knob dicts over `knob_names` from `grid` (sorted order,
+    deterministic).  The empty dict (route defaults) is always there —
+    it's the static configuration."""
+    combos = [{}]
+    for name in sorted(knob_names):
+        values = grid.get(name)
+        if not values:
+            continue
+        combos = [dict(c, **{name: v}) for c in combos for v in values]
+    # route defaults == the all-defaults combo; dedupe against it
+    out, seen = [], set()
+    for c in combos:
+        eff = tuple(sorted({k: v for k, v in c.items()
+                            if v != DEFAULT_KNOBS.get(k)}.items()))
+        if eff not in seen:
+            seen.add(eff)
+            out.append(dict(eff))
+    return out
+
+
+def enumerate_space(smoke: bool = False, ops=None, policies=None) -> list:
+    """The full config space: one dict per (op, policy, shape-class,
+    route, knob-combo) the tuned consult could ever select — routes are
+    filtered to the static choice's reference family at the class's
+    representative ctx, so no measurement is wasted on a config
+    `tuned_entry` would refuse."""
+    from repro.core import exec_plan
+    from repro.core.policy import get_policy
+    grid = SMOKE_KNOB_GRID if smoke else KNOB_GRID
+    fp = env_fingerprint()
+    space = []
+    for sc in SHAPE_CLASSES:
+        if ops is not None and sc.op not in ops:
+            continue
+        for preset in OP_POLICIES.get(sc.op, ()):
+            if policies is not None and preset not in policies:
+                continue
+            pol = get_policy(preset)
+            try:
+                static = exec_plan.resolve(sc.op, pol, **sc.rep)
+            except exec_plan.PlanError:
+                continue
+            fam = _family(static)
+            for route in exec_plan.candidates(sc.op):
+                if not route.eligible(pol, sc.rep):
+                    continue
+                if not (_family(route) & fam):
+                    continue
+                for knobs in _knob_combos(route.knobs, grid):
+                    space.append({
+                        "op": sc.op, "policy": preset,
+                        "policy_key": policy_key(pol),
+                        "shape_class": sc.name, "route": route.name,
+                        "knobs": knobs, **fp})
+    egrid = SMOKE_ENGINE_KNOB_GRID if smoke else ENGINE_KNOB_GRID
+    if (ops is None or ENGINE_OP in ops) and \
+            (policies is None or ENGINE_POLICY in policies):
+        for ps in egrid["page_size"]:
+            for k in egrid["spec_k"]:
+                space.append({
+                    "op": ENGINE_OP, "policy": ENGINE_POLICY,
+                    "policy_key": policy_key(ENGINE_POLICY),
+                    "shape_class": ENGINE_SHAPE_CLASS,
+                    "route": ENGINE_ROUTE,
+                    "knobs": {"page_size": ps, "spec_k": k}, **fp})
+    return space
+
+
+# -- cutout synthesis + measurement -------------------------------------------
+
+def _cutout(op: str, cls_name: str, pol):
+    """-> (args, kwargs) for `entry.run` at the class's representative
+    shapes (mirrors the tests/test_exec_plan.py fixtures)."""
+    import jax
+    import jax.numpy as jnp
+
+    rep = shape_class(op, cls_name).rep
+    if op == "matmul":
+        ks = jax.random.split(jax.random.PRNGKey(0), 2)
+        x = jax.random.normal(ks[0], (rep["m"], rep["k"]))
+        w = jax.random.normal(ks[1], (rep["k"], rep["n"])) * 0.5
+        return (x, w, pol), {}
+    if op == "flash_attn":
+        b, h, kv, hd = 2, 4, 2, 16
+        ks = jax.random.split(jax.random.PRNGKey(1), 3)
+        q = jax.random.normal(ks[0], (b, rep["sq"], h, hd))
+        k = jax.random.normal(ks[1], (b, rep["skv"], kv, hd))
+        v = jax.random.normal(ks[2], (b, rep["skv"], kv, hd))
+        return (q, k, v), dict(policy=pol, causal=True, window=None,
+                               offset=0, valid=None, scale=hd ** -0.5,
+                               kv_on_grid=False)
+    if op in ("paged_decode", "verify_attn"):
+        from repro.core import kvcache as KV
+        B, ps, mp = rep["batch"], rep["page_size"], rep["max_pages"]
+        n_kv, hd = rep["kv_heads"], rep["hd"]
+        sq = rep.get("sq", 1)
+        S = mp * ps
+        ks = jax.random.split(jax.random.PRNGKey(2), 3)
+        k = jax.random.normal(ks[0], (B, S, n_kv, hd))
+        v = jax.random.normal(ks[1], (B, S, n_kv, hd))
+        ref = KV.update_kv_cache(
+            KV.init_kv_cache(B, S, n_kv, hd, fmt=pol.fmt_kv,
+                             packed=pol.kv_packed),
+            k, v, 0, fmt=pol.fmt_kv, packed=pol.kv_packed)
+        cache = KV.paged_from_contiguous(ref, [S] * B, page_size=ps)
+        h = 2 * n_kv
+        if op == "paged_decode":
+            q = jax.random.normal(ks[2], (B, 1, h, hd))
+            positions = jnp.asarray([S - 1] * B, jnp.int32)
+        else:
+            q = jax.random.normal(ks[2], (B, sq, h, hd))
+            positions = jnp.asarray([S - sq] * B, jnp.int32)
+        return (q, cache, positions), dict(policy=pol, scale=hd ** -0.5)
+    if op == "quantize_pack":
+        x = jax.random.normal(jax.random.PRNGKey(3), (128, 64))
+        return (x,), dict(fmt=rep["fmt"], pack=rep["pack"], bm=128)
+    raise KeyError(f"no cutout builder for op {op!r}")
+
+
+def _time_thunk(thunk: Callable, reps: int) -> float:
+    """Warm (compile) + timed mean, us/call."""
+    import jax
+    jax.block_until_ready(thunk())
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = thunk()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def measure_config(cfg: dict, reps: int = 3) -> float:
+    """Benchmark one config as an isolated cutout -> us/call."""
+    if cfg["op"] == ENGINE_OP:
+        return _measure_engine(cfg["knobs"], reps)
+    from repro.core import exec_plan
+    from repro.core.policy import get_policy
+    pol = get_policy(cfg["policy"])
+    entry = exec_plan.route(cfg["op"], cfg["route"])
+    args, kwargs = _cutout(cfg["op"], cfg["shape_class"], pol)
+    kwargs = {**kwargs, **cfg["knobs"]}
+    return _time_thunk(lambda: entry.run(*args, **kwargs), reps)
+
+
+_ENGINE_FIXTURE = None
+
+
+def _engine_fixture():
+    """Reduced qwen3-4b (model, params, vocab), built once per sweep."""
+    global _ENGINE_FIXTURE
+    if _ENGINE_FIXTURE is None:
+        import jax
+
+        from repro.configs import get_config, reduce_config
+        from repro.models import build_model
+        cfg = reduce_config(get_config("qwen3-4b")).replace(
+            policy=ENGINE_POLICY)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        _ENGINE_FIXTURE = (model, params, cfg.vocab_size)
+    return _ENGINE_FIXTURE
+
+
+def engine_config_from_knobs(knobs: dict):
+    """EngineConfig (+SpecConfig) for one engine-pseudo-op knob point.
+    Pool rows and per-request rows stay constant across page sizes, so
+    the sweep compares layouts, not capacities."""
+    from repro.launch.engine import EngineConfig, SpecConfig
+    ps = int(knobs.get("page_size", 8))
+    if ENGINE_POOL_ROWS % ps or ENGINE_SEQ_ROWS % ps:
+        raise ValueError(f"page_size {ps} must divide "
+                         f"{ENGINE_POOL_ROWS}/{ENGINE_SEQ_ROWS}")
+    ecfg = EngineConfig(page_size=ps, n_pages=ENGINE_POOL_ROWS // ps,
+                        max_batch=4, max_pages_per_req=ENGINE_SEQ_ROWS // ps,
+                        token_budget=16, prefill_chunk=8)
+    k = int(knobs.get("spec_k", 0))
+    spec = SpecConfig(ENGINE_DRAFT_POLICY, k=k) if k > 0 else None
+    return ecfg, spec
+
+
+def _measure_engine(knobs: dict, reps: int) -> float:
+    """Whole-engine cutout: serve the fixed synthetic workload through
+    a warm engine; us per generated token (knob points generate
+    different token counts under spec, so raw wall is not comparable)."""
+    from repro.launch.engine import Engine, synthetic_workload
+    model, params, vocab = _engine_fixture()
+    ecfg, spec = engine_config_from_knobs(knobs)
+    engine = Engine(model, params, ecfg, spec=spec)
+    engine.run(synthetic_workload(2, vocab=vocab, seed=1,
+                                  prompt_range=(8, 24), gen_range=(4, 10)))
+    reqs = synthetic_workload(6, vocab=vocab, seed=0,
+                              prompt_range=(8, 24), gen_range=(4, 10))
+    best = float("inf")
+    for _ in range(reps):
+        engine.reset_stats()
+        t0 = time.perf_counter()
+        rep = engine.run(reqs)
+        us = (time.perf_counter() - t0) * 1e6
+        best = min(best, us / max(1, rep["gen_tokens"]))
+    return best
+
+
+def best_engine_knobs(db_path: str) -> Optional[dict]:
+    """Fastest measured engine knob point in the DB (None if none)."""
+    db = load_db(db_path)
+    rec = _best_record(db, ENGINE_OP, policy_key(ENGINE_POLICY),
+                       ENGINE_SHAPE_CLASS)
+    return dict(rec.get("knobs") or {}) if rec else None
+
+
+# -- the sweep ----------------------------------------------------------------
+
+def run_sweep(db_path: str, *, smoke: bool = False, shard=(0, 1),
+              reps: int = 3, ops=None, policies=None,
+              progress: Callable = None) -> dict:
+    """Measure this shard's unmeasured slice of the config space into
+    `db_path`.  Returns {"measured", "skipped", "other_shard", "total"}.
+
+    Sharding partitions by config hash — every worker derives the same
+    partition with no coordination; re-running any shard is a no-op for
+    already-measured configs (skip-if-measured)."""
+    i, n = shard
+    if not (0 <= i < n):
+        raise ValueError(f"bad shard {i}/{n}")
+    space = enumerate_space(smoke=smoke, ops=ops, policies=policies)
+    db = load_db(db_path)
+    stats = {"measured": 0, "skipped": 0, "other_shard": 0,
+             "total": len(space)}
+    for cfg in space:
+        h = config_hash(cfg)
+        if shard_of(h, n) != i:
+            stats["other_shard"] += 1
+            continue
+        if h in db["records"]:
+            stats["skipped"] += 1
+            continue
+        us = measure_config(cfg, reps=reps)
+        db["records"][h] = {**cfg, "us": us, "reps": reps}
+        db["meta"] = env_fingerprint()
+        stats["measured"] += 1
+        if progress:
+            progress(cfg, us)
+        save_db(db_path, db)         # crash-safe: keep what we measured
+    return stats
+
+
+def missing_configs(db_path: str, *, smoke: bool = False) -> list:
+    """Configs of the (smoke) space with no record in the DB."""
+    db = load_db(db_path)
+    return [cfg for cfg in enumerate_space(smoke=smoke)
+            if config_hash(cfg) not in db["records"]]

@@ -9,6 +9,11 @@ backend, priority, reference fallback + pinned tolerance, and the tests
   - every named test file exists, and a ``file::name`` entry names a
     test function actually defined in that file (parametrized variants
     match by prefix);
+  - every tunable knob a route's ``run`` exposes is declared
+    (`PlanEntry.knobs`) and has a grid in the tuner's config space
+    (`repro.runtime.tuner.KNOB_GRID`), and every record in a shipped
+    tuned-defaults DB (`benchmarks/tuned/*.json`) names a live route +
+    shape-class, carries only declared knobs, and hashes to its own key;
   - every route whose predicate requires ``n_devices > 1`` (the sharded
     serving routes, the wire-compressed allreduce) names at least one
     test in the multi-device suite (`tests/test_distributed.py` /
@@ -68,6 +73,97 @@ def _requires_multidevice(entry) -> bool:
     return all(many.values()) and not all(one.values()) and one != many
 
 
+def _knob_errors(entry) -> list:
+    """The tuner-contract checks for one route: every knob-named kwarg
+    the run signature exposes must be declared in `entry.knobs`, and
+    every declared knob must have a grid in the tuner's config space —
+    otherwise the sweep silently never measures it (or `tuned_entry`
+    silently drops it) and the tuned table lies."""
+    import inspect
+
+    from repro.runtime import tuner
+    errs = []
+    try:
+        params = inspect.signature(entry.run).parameters
+    except (TypeError, ValueError):
+        params = {}
+    exposed = {n for n, p in params.items()
+               if n in tuner.KNOB_GRID and p.kind in (
+                   inspect.Parameter.KEYWORD_ONLY,
+                   inspect.Parameter.POSITIONAL_OR_KEYWORD)}
+    for knob in sorted(exposed - set(entry.knobs)):
+        errs.append(f"{entry.op}/{entry.name}: run() exposes tunable "
+                    f"knob {knob!r} but the route does not declare it "
+                    "(knobs=...)")
+    for knob in entry.knobs:
+        if knob not in tuner.KNOB_GRID:
+            errs.append(f"{entry.op}/{entry.name}: declared knob "
+                        f"{knob!r} has no grid in tuner.KNOB_GRID — "
+                        "the sweep can never measure it")
+        elif knob not in exposed:
+            errs.append(f"{entry.op}/{entry.name}: declares knob "
+                        f"{knob!r} that run() does not accept")
+    return errs
+
+
+def _tuned_defaults_errors() -> list:
+    """Validate every shipped tuned-defaults DB under benchmarks/tuned/:
+    records must name live routes/shape-classes, carry only declared
+    knobs, and hash to their own key (integrity — a hand-edited record
+    that no sweep produced fails here)."""
+    import glob
+    import json
+
+    from repro.core import exec_plan
+    from repro.runtime import tuner
+    errs = []
+    for path in sorted(glob.glob(os.path.join(ROOT, "benchmarks", "tuned",
+                                              "*.json"))):
+        rel = os.path.relpath(path, ROOT)
+        try:
+            with open(path) as f:
+                raw = json.load(f)
+        except (OSError, json.JSONDecodeError) as exc:
+            errs.append(f"{rel}: unreadable ({exc})")
+            continue
+        for h, rec in (raw.get("records") or {}).items():
+            where = f"{rel}[{h}]"
+            if not isinstance(rec, dict) or "op" not in rec \
+                    or "route" not in rec:
+                errs.append(f"{where}: malformed record")
+                continue
+            knobs = set(rec.get("knobs") or {})
+            if rec["op"] == tuner.ENGINE_OP:
+                extra = knobs - set(tuner.ENGINE_KNOB_GRID)
+                if extra:
+                    errs.append(f"{where}: unknown engine knob(s) "
+                                f"{sorted(extra)}")
+            else:
+                try:
+                    entry = exec_plan.route(rec["op"], rec["route"])
+                except exec_plan.PlanError:
+                    errs.append(f"{where}: references nonexistent route "
+                                f"{rec['op']}/{rec['route']}")
+                    continue
+                if rec.get("shape_class") not in {
+                        sc.name for sc in tuner.SHAPE_CLASSES
+                        if sc.op == rec["op"]}:
+                    errs.append(f"{where}: unknown shape class "
+                                f"{rec.get('shape_class')!r} for "
+                                f"{rec['op']}")
+                extra = knobs - set(entry.knobs)
+                if extra:
+                    errs.append(f"{where}: knob(s) {sorted(extra)} not "
+                                f"declared by {rec['op']}/{rec['route']}")
+            try:
+                if tuner.config_hash(rec) != h:
+                    errs.append(f"{where}: key does not match the "
+                                "record's content hash")
+            except KeyError as exc:
+                errs.append(f"{where}: missing hash field {exc}")
+    return errs
+
+
 def collect():
     from repro.core import exec_plan
     rows, errors = [], []
@@ -85,6 +181,8 @@ def collect():
                     f"{op}/{e.name}: predicate requires n_devices > 1 but "
                     "no named test is in the multi-device suite "
                     "(tests/test_distributed.py or tests/test_tp_*.py)")
+            errors.extend(_knob_errors(e))
+    errors.extend(_tuned_defaults_errors())
     return rows, errors
 
 

@@ -1,0 +1,144 @@
+"""Run the measurement-driven autotuner sweep (`repro.runtime.tuner`).
+
+Benchmarks every (op, policy, shape-class, route, knob) config of the
+tuner's space as an isolated cutout and persists the results in a JSON
+measurement database — content-hash keyed, so re-runs skip what is
+already measured and the sweep shards across workers with no
+coordination:
+
+    # worker i of n, each measuring a disjoint hash-partitioned slice
+    python tools/tune.py --db tuned.json --shard 0/2 &
+    python tools/tune.py --db tuned.json.1 --shard 1/2
+    # (separate DB files per concurrent worker; merge with --merge)
+
+    # the CI lane: small grids, then assert the space is fully measured
+    python tools/tune.py --db benchmarks/tuned/ci_default.json --smoke
+    python tools/tune.py --db benchmarks/tuned/ci_default.json --smoke \
+        --verify
+
+Serving picks the DB up via ``REPRO_TUNED_DB=<path>`` (kill switch
+``REPRO_TUNED=0``); `exec_plan.describe()` then reports ``tuned`` vs
+``prior`` per resolution.  See docs/tuning.md.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+
+def _parse_shard(text: str):
+    try:
+        i, n = text.split("/")
+        i, n = int(i), int(n)
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"shard must look like i/n, got {text!r}")
+    if not (n >= 1 and 0 <= i < n):
+        raise argparse.ArgumentTypeError(f"bad shard {text!r}")
+    return i, n
+
+
+def _verify(db_path: str, smoke: bool) -> int:
+    """Exit nonzero unless the (smoke) space is fully measured and the
+    tuned consult resolves deterministically for every CI key."""
+    from repro.core import exec_plan
+    from repro.core.policy import get_policy
+    from repro.runtime import tuner
+
+    missing = tuner.missing_configs(db_path, smoke=smoke)
+    if missing:
+        print(f"tune --verify: {len(missing)} unmeasured config(s)")
+        for cfg in missing[:10]:
+            print(f"  MISSING {cfg['op']}/{cfg['route']} "
+                  f"{cfg['shape_class']} {cfg['knobs']}")
+        return 1
+    os.environ["REPRO_TUNED_DB"] = db_path
+    tuner.clear_caches()
+    checked = 0
+    for sc in tuner.SHAPE_CLASSES:
+        for preset in tuner.OP_POLICIES.get(sc.op, ()):
+            pol = get_policy(preset)
+            first = exec_plan.resolve(sc.op, pol, **sc.rep)
+            again = exec_plan.resolve(sc.op, pol, **sc.rep)
+            if first is not again:
+                print(f"tune --verify: nondeterministic resolve for "
+                      f"{sc.op}/{sc.name} under {preset}")
+                return 1
+            d = first.describe(pol, sc.rep)
+            print(f"  {sc.op:<14} {sc.name:<14} {preset:<16} -> "
+                  f"{first.name} [{d['selection']}] "
+                  f"knobs={d.get('tuned_knobs', {})}")
+            checked += 1
+    eng = tuner.best_engine_knobs(db_path)
+    print(f"  engine         {tuner.ENGINE_SHAPE_CLASS:<14} "
+          f"{tuner.ENGINE_POLICY:<16} -> best knobs {eng}")
+    print(f"tune --verify: OK ({checked} keys, space fully measured)")
+    return 0
+
+
+def _merge(dst: str, sources) -> int:
+    from repro.runtime import tuner
+    db = tuner.load_db(dst)
+    added = 0
+    for src in sources:
+        other = tuner.load_db(src)
+        for h, rec in other["records"].items():
+            if h not in db["records"]:
+                db["records"][h] = rec
+                added += 1
+        if other["meta"]:
+            db["meta"] = other["meta"]
+    tuner.save_db(dst, db)
+    print(f"merged {added} new record(s) into {dst} "
+          f"({len(db['records'])} total)")
+    return 0
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    p.add_argument("--db", required=True, help="measurement DB path")
+    p.add_argument("--smoke", action="store_true",
+                   help="small CI grids (subset of the full space)")
+    p.add_argument("--shard", type=_parse_shard, default=(0, 1),
+                   metavar="i/n", help="measure shard i of n (by hash)")
+    p.add_argument("--reps", type=int, default=3,
+                   help="timed repetitions per cutout")
+    p.add_argument("--ops", nargs="*", default=None,
+                   help="restrict to these ops (default: all)")
+    p.add_argument("--policies", nargs="*", default=None,
+                   help="restrict to these policy presets")
+    p.add_argument("--verify", action="store_true",
+                   help="no sweep: assert the space is fully measured "
+                        "and the tuned consult is deterministic")
+    p.add_argument("--merge", nargs="*", default=None, metavar="SRC",
+                   help="no sweep: merge SRC DBs into --db")
+    args = p.parse_args(argv)
+
+    if args.merge is not None:
+        return _merge(args.db, args.merge)
+    if args.verify:
+        return _verify(args.db, args.smoke)
+
+    from repro.runtime import tuner
+
+    def progress(cfg, us):
+        print(f"  {cfg['op']:<14} {cfg['shape_class']:<14} "
+              f"{cfg['route']:<22} {json.dumps(cfg['knobs']):<32} "
+              f"{us:10.1f} us")
+
+    stats = tuner.run_sweep(args.db, smoke=args.smoke, shard=args.shard,
+                            reps=args.reps, ops=args.ops,
+                            policies=args.policies, progress=progress)
+    print(f"sweep: {stats['measured']} measured, {stats['skipped']} "
+          f"already in DB, {stats['other_shard']} on other shards "
+          f"(space: {stats['total']})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
