@@ -309,6 +309,66 @@ def tp_collective_bytes():
              f"tokens_per_s={rep['tokens_per_s']:.1f}")]
 
 
+def moe_grouped_dpa():
+    """MoE serving through the fused quantize->pack->grouped-DPA expert
+    pipeline (reduced granite-moe, 8 experts top-2).
+
+      expert_w_red_fp8 / expert_w_red_fp4 : expert-weight bytes at the
+          grouped route's operand interface vs the f32 expert residency
+          the seed paid — deterministic byte accounting from the engine
+          report (fp8 preset exactly 4x, packed-fp4 preset exactly 8x),
+          pinned tight by the regression gate.
+      operand_red_fp4 : grouped-matmul operand bytes per decode step
+          (packed fp4 weights + fp8 activations) vs both stacks at f32
+          width — the route's bytes model, deterministic.
+      tokens_per_s : the engine end to end under the packed preset — a
+          loose CPU-interpret tripwire, not a TPU number.
+    """
+    import time
+
+    import jax
+
+    from repro.configs import get_config, reduce_config
+    from repro.launch.engine import Engine, EngineConfig, synthetic_workload
+    from repro.models import build_model
+
+    base = reduce_config(get_config("granite-moe-1b-a400m"))
+    ecfg = EngineConfig(page_size=8, n_pages=48, max_batch=4,
+                        max_pages_per_req=6, token_budget=16,
+                        prefill_chunk=8)
+
+    def serve(policy, seed=0):
+        cfg = base.replace(policy=policy)
+        model = build_model(cfg)
+        params = model.init(jax.random.PRNGKey(0))
+        engine = Engine(model, params, ecfg)
+        # warm-up compiles prefill + decode; the timed run reuses them
+        engine.run(synthetic_workload(2, vocab=cfg.vocab_size, seed=1,
+                                      prompt_range=(8, 16),
+                                      gen_range=(4, 8)))
+        engine.reset_stats()
+        reqs = synthetic_workload(4, vocab=cfg.vocab_size, seed=seed,
+                                  prompt_range=(8, 16), gen_range=(4, 8))
+        t0 = time.perf_counter()
+        rep = engine.run(reqs)
+        return (time.perf_counter() - t0) * 1e6, rep
+
+    _, rep8 = serve("w8a8_kv8_attn8")
+    us, rep4 = serve("w4a8_kv4_attn8")
+    ctx = dict(rep4)
+    wide = 4.0  # f32 bytes per element, both operand stacks
+    mk = ecfg.max_batch * (int(base.capacity_factor * base.top_k
+                               / base.n_experts) + 1)
+    emk = base.n_experts * mk * base.d_model
+    ekn = base.n_experts * base.d_model * base.d_ff
+    operand_red = wide * (emk + ekn) / ctx["moe_grouped_bytes_per_step_layer"]
+    return [("engine/moe_grouped_dpa", us,
+             f"expert_w_red_fp8={rep8['expert_w_reduction_vs_f32']:.2f}x "
+             f"expert_w_red_fp4={rep4['expert_w_reduction_vs_f32']:.2f}x "
+             f"operand_red_fp4={operand_red:.2f}x "
+             f"tokens_per_s={rep4['tokens_per_s']:.1f}")]
+
+
 def tuned_vs_static():
     """Tuned resolution vs static priority, over the shipped CI DB.
 
@@ -386,6 +446,8 @@ def tuned_vs_static():
 
 
 ALL = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather,
-       spec_decode, prefix_cache, tp_collective_bytes, tuned_vs_static]
+       spec_decode, prefix_cache, tp_collective_bytes, moe_grouped_dpa,
+       tuned_vs_static]
 SMOKE = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather,
-         spec_decode, prefix_cache, tp_collective_bytes, tuned_vs_static]
+         spec_decode, prefix_cache, tp_collective_bytes, moe_grouped_dpa,
+         tuned_vs_static]

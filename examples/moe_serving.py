@@ -1,0 +1,89 @@
+"""MoE serving walkthrough: the fused quantize->pack->grouped-DPA expert
+pipeline behind the continuous-batching engine.
+
+Dense serving moves every weight for every token; an MoE layer routes
+each token to top-k of E experts, so the *resident expert stack* — not
+the per-token compute — dominates weight bytes.  This demo serves a
+reduced granite-moe config (8 experts, top-2) through `launch.engine`
+and shows the three claims:
+
+  1. the expert contraction runs the grouped-DPA Pallas route
+     (`pallas_grouped_fused`): per-expert (M,K)x(K,N) tiles, packed-fp4
+     expert weights, activations quantized to fp8 in the kernel
+     prologue — the report names the route and its bytes/step;
+  2. expert weights at the grouped route's operand interface are
+     exactly 8x smaller than the f32 expert residency the seed paid
+     (fp8 preset: exactly 4x);
+  3. numerics are unchanged: greedy engine outputs are bit-identical,
+     per request, to the static `serve.generate` path.  MoE expert
+     capacity is *chunk-local* (C grows with tokens routed together),
+     so the engine runs `prefill_chunk=1` to reproduce the static
+     path's token-by-token routing exactly.
+
+Run: PYTHONPATH=src python examples/moe_serving.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.launch.engine import (Engine, EngineConfig, format_report,
+                                 synthetic_workload)
+from repro.launch.serve import generate
+from repro.models import build_model
+
+
+def main():
+    # packed-fp4 expert/linear weights + fused fp8 activations, fp8 DPA
+    # attention over a packed-fp4 KV cache (the full serving preset)
+    cfg = reduce_config(get_config("granite-moe-1b-a400m")).replace(
+        policy="w4a8_kv4_attn8")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    print(f"model: {cfg.name} reduced — {cfg.n_experts} experts "
+          f"top-{cfg.top_k}, {cfg.n_layers} layers, policy {cfg.policy}")
+
+    # prefill_chunk=1: MoE capacity C = f(chunk tokens), so single-token
+    # prefill is what keeps the engine bit-identical to the static path
+    ecfg = EngineConfig(page_size=8, n_pages=48, max_batch=4,
+                        max_pages_per_req=6, token_budget=16,
+                        prefill_chunk=1)
+    reqs = synthetic_workload(6, vocab=cfg.vocab_size, seed=0,
+                              prompt_range=(6, 16), gen_range=(3, 8))
+    print("workload:", ", ".join(f"#{r.rid} {r.n_prompt}+{r.max_new}"
+                                 for r in reqs))
+    engine = Engine(model, params, ecfg)
+    rep = engine.run(reqs)
+    print()
+    print(format_report(rep, cfg.policy))
+
+    # claim 1: the grouped route actually served the experts
+    assert rep["moe_grouped_route"] == "pallas_grouped_fused", rep
+    # claim 2: expert-weight bytes at format width, exactly 8x under f32
+    red = rep["expert_w_reduction_vs_f32"]
+    print(f"\nexpert weights: {rep['expert_w_bytes'] / 1e6:.3f} MB packed "
+          f"fp4 vs {rep['expert_w_bytes_f32'] / 1e6:.3f} MB f32 "
+          f"({red:.1f}x smaller)")
+    assert abs(red - 8.0) < 1e-6, red
+
+    # claim 3: engine output == static path, per request
+    print("\nper-request greedy outputs vs the static-batch path:")
+    for req in sorted(engine.finished, key=lambda r: r.rid)[:3]:
+        out = generate(model, params, jnp.asarray(req.prompt[None]),
+                       req.max_new, ecfg.s_max)
+        want = np.asarray(out)[0, req.n_prompt:]
+        same = np.array_equal(np.asarray(req.out_tokens), want)
+        print(f"  req {req.rid} ({req.n_prompt}+{req.max_new} tokens): "
+              f"{'bit-identical' if same else 'MISMATCH'} "
+              f"{req.out_tokens[:6]}")
+        assert same, (req.rid, req.out_tokens, want.tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -51,12 +51,33 @@ def dpa_dot(x, w, policy: TransPrecisionPolicy):
     return entry.run(x, w, policy)
 
 
+# grouped einsums the Pallas grouped-DPA pipelines understand as a stack
+# of per-expert (M,K)x(K,N) products.  Anything else falls back to the
+# XLA grouped routes (the registry predicates gate on this tuple).
+GROUPED_EQS = ("gti,gio->gto", "becd,edf->becf")
+
+
+def grouped_dims(eq: str, x_shape, w_shape):
+    """(experts, per-expert M, K, N) for a known grouped einsum, else
+    None.  "becd,edf->becf" folds the batch dim into per-expert rows
+    (M = B*C), matching the pipeline's normalized (E,M,K) view."""
+    if eq == "gti,gio->gto":
+        return x_shape[0], x_shape[1], x_shape[2], w_shape[2]
+    if eq == "becd,edf->becf":
+        b, e, c, d = x_shape
+        return e, b * c, d, w_shape[2]
+    return None
+
+
 def dpa_grouped_dot(x, w, policy: TransPrecisionPolicy, *, eq: str):
     """The grouped (per-expert) DPA contract: einsum `eq` over x and the
     stacked expert weights w, routed through the plan layer."""
     policy = get_policy(policy)
+    dims = grouped_dims(eq, x.shape, w.shape)
+    ctx = {} if dims is None else dict(zip(("e", "m", "k", "n"), map(int,
+                                                                     dims)))
     entry = exec_plan.resolve("grouped_matmul", policy,
-                              w_dtype=str(w.dtype), eq=eq)
+                              w_dtype=str(w.dtype), eq=eq, **ctx)
     return entry.run(x, w, policy, eq=eq)
 
 

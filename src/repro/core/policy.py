@@ -151,6 +151,14 @@ POLICIES = {
                                            fmt_attn="fp8_e4m3",
                                            fmt_kv="fp4_e2m1",
                                            kv_packed=True),
+    # all-fp8 serving: fused fp8 kernel linears, fp8 DPA attention, fp8
+    # cache — the 4x-vs-f32 operand-byte point on the Table-I ladder (the
+    # packed-fp4 preset above is the 8x point)
+    "w8a8_kv8_attn8": TransPrecisionPolicy("fp8_e4m3", "fp8_e4m3",
+                                           use_kernel=True,
+                                           fused_quant=True,
+                                           fmt_attn="fp8_e4m3",
+                                           fmt_kv="fp8_e4m3"),
 }
 
 

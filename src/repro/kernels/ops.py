@@ -21,6 +21,7 @@ from repro.core import exec_plan
 from repro.core.packing import pack_fp4_axis
 from repro.core.policy import TransPrecisionPolicy, get_policy
 from repro.core.quantize import compute_scale, cast_to
+from repro.kernels import dpa_grouped_matmul as _gm
 from repro.kernels import dpa_matmul as _dm
 from repro.kernels import flash_attention as _fa
 from repro.kernels import quantize as _q
@@ -112,6 +113,86 @@ def dpa_matmul_prequant_pipeline(x, w, policy: TransPrecisionPolicy, *,
     if pn:
         out = out[:, :N]
     return out.reshape(*lead, N).astype(x.dtype)
+
+
+def _grouped_views(eq: str, x, w):
+    """Normalize a known grouped einsum to stacked per-expert matmuls.
+
+    -> (x3 (E,M,K), w3 (E,K,N), unview: (E,M,N) -> eq's output shape).
+    The supported eqs are `core.linear.GROUPED_EQS`; the registry
+    predicates keep the Pallas grouped routes off anything else."""
+    if eq == "gti,gio->gto":
+        return x, w, lambda o: o
+    if eq == "becd,edf->becf":
+        b, e, c, d = x.shape
+        x3 = x.transpose(1, 0, 2, 3).reshape(e, b * c, d)
+        return x3, w, lambda o: o.reshape(e, b, c,
+                                          -1).transpose(1, 0, 2, 3)
+    raise ValueError(f"unsupported grouped einsum {eq!r}")
+
+
+def _prep_grouped_weights(w3, policy, bk, bn):
+    """Quantize + pad + (optionally) pack the stacked expert weights."""
+    pack_w = policy.packed and policy.fmt_weights == "fp4_e2m1"
+    wq, sw = _quant_operand(w3, policy.fmt_weights, axis_scale=1)
+    wq, _ = _pad_to(wq, bk, 1)
+    wq, pn = _pad_to(wq, bn, 2)
+    swp, _ = _pad_to(sw, bn, 2)
+    if pack_w:
+        wq = pack_fp4_axis(wq, 1)
+    return wq, swp, pn, pack_w
+
+
+def dpa_grouped_fused_pipeline(x, w, policy: TransPrecisionPolicy, *,
+                               eq: str, bm=128, bk=128, bn=128):
+    """Grouped fused-quant pipeline: per-expert activations ship at
+    native width (f32/bf16) and quantize in the kernel prologue with
+    per-(row, K-block) scales; expert weights are pre-quantized (packed
+    fp4 nibbles when the policy says — 8x fewer resident weight bytes)."""
+    policy = get_policy(policy)
+    x3, w3, unview = _grouped_views(eq, x, w)
+    M, N = x3.shape[1], w3.shape[-1]
+    bm_ = min(bm, max(8, M))
+    wq, swp, pn, pack_w = _prep_grouped_weights(w3, policy, bk, bn)
+    x3p, pm = _pad_to(x3, bm_, 1)
+    x3p, _ = _pad_to(x3p, bk, 2)
+    out = _gm.dpa_grouped_matmul_fused(
+        x3p, wq, swp, fmt_x=policy.fmt_acts, fmt_w=policy.fmt_weights,
+        bm=bm_, bk=bk, bn=bn, pack_w=pack_w, interpret=INTERPRET)
+    if pm:
+        out = out[:, :M]
+    if pn:
+        out = out[:, :, :N]
+    return unview(out.astype(x.dtype))
+
+
+def dpa_grouped_prequant_pipeline(x, w, policy: TransPrecisionPolicy, *,
+                                  eq: str, bm=128, bk=128, bn=128):
+    """Grouped prequant pipeline: XLA quantize pass on both operand
+    stacks, prequant grouped kernel; fp4 sides nibble-packed along K
+    before dispatch when the policy says — per-expert BlockSpecs move
+    half the bytes, bit-identical results."""
+    policy = get_policy(policy)
+    x3, w3, unview = _grouped_views(eq, x, w)
+    M, N = x3.shape[1], w3.shape[-1]
+    bm_ = min(bm, max(8, M))
+    pack_x = policy.packed and policy.fmt_acts == "fp4_e2m1"
+    wq, swp, pn, pack_w = _prep_grouped_weights(w3, policy, bk, bn)
+    xq, sx = _quant_operand(x3, policy.fmt_acts, axis_scale=-1)
+    xq, pm = _pad_to(xq, bm_, 1)
+    sxp, _ = _pad_to(sx, bm_, 1)
+    xq, _ = _pad_to(xq, bk, 2)
+    if pack_x:
+        xq = pack_fp4_axis(xq, 2)
+    out = _gm.dpa_grouped_matmul_prequant(
+        xq, wq, sxp, swp, fmt_x=policy.fmt_acts,
+        fmt_w=policy.fmt_weights, bm=bm_, bk=bk, bn=bn,
+        pack_x=pack_x, pack_w=pack_w, interpret=INTERPRET)
+    if pm:
+        out = out[:, :M]
+    if pn:
+        out = out[:, :, :N]
+    return unview(out.astype(x.dtype))
 
 
 def dpa_matmul(x, w, policy: TransPrecisionPolicy, *, bm=128, bk=128,

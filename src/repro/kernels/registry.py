@@ -38,7 +38,7 @@ import os
 import jax.numpy as jnp
 
 from repro.core import exec_plan
-from repro.core.linear import NATIVE_NARROW
+from repro.core.linear import GROUPED_EQS, NATIVE_NARROW
 from repro.core.packing import operand_nbytes, pack_fp4_axis
 from repro.core.quantize import cast_to, compute_scale, fake_quant
 from repro.kernels import ops as kops
@@ -165,11 +165,21 @@ def _gmm_native(x, w, policy, *, eq):
 
 
 def _gmm_fake_quant(x, w, policy, *, eq):
-    w = w.astype(x.dtype)
-    w = fake_quant(w, policy.fmt_weights,
-                   axis=1 if policy.w_granularity == "per_channel" else None)
-    x = fake_quant(x, policy.fmt_acts)
-    return jnp.einsum(eq, x, w,
+    # quantize the *master* weights (no pre-cast through x.dtype — that
+    # would double-round them) with the same granularity treatment as the
+    # dense `_mm_fake_quant`; the stacked expert layout (E, d_in, d_out)
+    # puts the contraction axis at 1 where dense has it at 0.
+    wq = fake_quant(
+        w, policy.fmt_weights,
+        axis=1 if policy.w_granularity == "per_channel" else None,
+        block=policy.block_size if policy.w_granularity == "per_block"
+        else None)
+    xq = fake_quant(
+        x, policy.fmt_acts,
+        axis=-1 if policy.a_granularity == "per_channel" else None,
+        block=policy.block_size if policy.a_granularity == "per_block"
+        else None)
+    return jnp.einsum(eq, xq, wq,
                       preferred_element_type=_acc_t(policy)).astype(x.dtype)
 
 
@@ -178,23 +188,96 @@ def _gmm_f32(x, w, policy, *, eq):
                       preferred_element_type=_acc_t(policy)).astype(x.dtype)
 
 
+def _gmm_operand_bytes(policy, ctx):
+    """Format-width operand bytes for the stacked per-expert matmuls —
+    the dense `_mm_operand_bytes` with the expert count folded in.
+    `dpa_grouped_dot` derives e/m/k/n from the einsum + shapes."""
+    e, m, k, n = ctx.get("e"), ctx.get("m"), ctx.get("k"), ctx.get("n")
+    if not (e and m and k and n):
+        return None
+    return (operand_nbytes(e * m * k, policy.fmt_acts, packed=policy.packed)
+            + operand_nbytes(e * k * n, policy.fmt_weights,
+                             packed=policy.packed))
+
+
+def _gmm_wide_bytes(policy, ctx):
+    """Both operand stacks traverse at full f32 width (fake-quant and the
+    disabled path quantize — if at all — inside XLA, post-load)."""
+    e, m, k, n = ctx.get("e"), ctx.get("m"), ctx.get("k"), ctx.get("n")
+    if not (e and m and k and n):
+        return None
+    return 4 * (e * m * k + e * k * n)
+
+
+def _gmm_native_bytes(policy, ctx):
+    """Native-narrow expert weights move at format width (never packed:
+    packing needs the kernel path's nibble decode); activations quantize
+    to fmt_acts before the einsum."""
+    e, m, k, n = ctx.get("e"), ctx.get("m"), ctx.get("k"), ctx.get("n")
+    if not (e and m and k and n):
+        return None
+    return (operand_nbytes(e * m * k, policy.fmt_acts, packed=False)
+            + operand_nbytes(e * k * n, policy.fmt_weights, packed=False))
+
+
 exec_plan.register(
     "grouped_matmul", "xla_native_narrow", backend="xla", run=_gmm_native,
     priority=40, reference="xla_fake_quant", tol=0.35,
     predicate=lambda policy, ctx: {
         "native_narrow_weights": ctx.get("w_dtype") in NATIVE_NARROW},
+    bytes_moved=_gmm_native_bytes,
     tests=("tests/test_exec_plan.py::test_route_pinned_to_reference",),
     note="pre-quantized expert weights stay native in the einsum")
+
+exec_plan.register(
+    "grouped_matmul", "pallas_grouped_fused", backend="pallas",
+    run=kops.dpa_grouped_fused_pipeline,
+    priority=30, reference="xla_fake_quant", tol=0.35,
+    predicate=lambda policy, ctx: {
+        "kernel_path": policy.use_kernel or ctx.get("kernel_only", False),
+        "fused_quant": policy.fused_quant,
+        "float_weights": ctx.get("w_dtype") not in NATIVE_NARROW,
+        "known_grouped_eq": ctx.get("eq") in GROUPED_EQS,
+        "dpa_enabled": policy.enabled},
+    bytes_moved=_gmm_operand_bytes,
+    tests=("tests/test_grouped_dpa.py::test_grouped_pipeline_vs_fake_quant",
+           "tests/test_grouped_dpa.py::test_grouped_kernel_capacity_"
+           "dropped_rows"),
+    note="per-expert in-kernel activation quantize; packed fp4 expert "
+         "weights move 8x fewer resident bytes",
+    knobs=("bm", "bk", "bn"))
+
+exec_plan.register(
+    "grouped_matmul", "pallas_grouped_prequant", backend="pallas",
+    run=kops.dpa_grouped_prequant_pipeline,
+    priority=25, reference="xla_fake_quant", tol=0.35,
+    predicate=lambda policy, ctx: {
+        "kernel_path": policy.use_kernel or ctx.get("kernel_only", False),
+        "prequant": not policy.fused_quant,
+        "float_weights": ctx.get("w_dtype") not in NATIVE_NARROW,
+        "known_grouped_eq": ctx.get("eq") in GROUPED_EQS,
+        "dpa_enabled": policy.enabled},
+    bytes_moved=_gmm_operand_bytes,
+    tests=("tests/test_grouped_dpa.py::test_grouped_pipeline_vs_fake_quant",
+           "tests/test_grouped_dpa.py::test_grouped_prequant_matches_"
+           "dense_per_expert"),
+    note="XLA quantize pass over both stacks; packed fp4 operand bytes "
+         "when policy.packed",
+    knobs=("bm", "bk", "bn"))
 
 exec_plan.register(
     "grouped_matmul", "xla_fake_quant", backend="xla", run=_gmm_fake_quant,
     priority=10,
     predicate=lambda policy, ctx: {"dpa_enabled": policy.enabled},
-    tests=("tests/test_layers.py::test_moe_capacity_drop_and_combine_weights",),
+    bytes_moved=_gmm_wide_bytes,
+    tests=("tests/test_layers.py::test_moe_capacity_drop_and_combine_weights",
+           "tests/test_grouped_dpa.py::test_gmm_fake_quant_matches_dense_"
+           "reference"),
     note="per-expert STE quant-dequant, wide accumulation")
 
 exec_plan.register(
     "grouped_matmul", "xla_f32", backend="xla", run=_gmm_f32, priority=0,
+    bytes_moved=_gmm_wide_bytes,
     tests=("tests/test_layers.py::test_moe_uniform_router_is_lossless_at_high_capacity",),
     note="DPA disabled: plain grouped einsum")
 

@@ -96,6 +96,7 @@ import numpy as np
 
 from repro.core import exec_plan
 from repro.core import kvcache as KV
+from repro.core.packing import operand_nbytes
 from repro.core.policy import get_policy
 from repro.distributed import tp as TP
 from repro.serving import sampler as SMP
@@ -257,6 +258,18 @@ class Engine:
                 "engine stores format-width codes — pick a fmt_kv preset "
                 "(e.g. kv8_attn_f32 for f32 arithmetic over an fp8 cache)"
             ) from e
+        # MoE configs serve through the grouped_matmul plan: resolving it
+        # up front states which grouped kernel the expert contraction
+        # runs (the decode-step dispatch shape: each batch row buffers
+        # its single token into (B, E, C, d) with C = f(S=1))
+        self.moe_plan, self._moe_ctx = None, None
+        if cfg.is_moe:
+            c = int(cfg.capacity_factor * cfg.top_k / cfg.n_experts) + 1
+            self._moe_ctx = dict(w_dtype="float32", eq="becd,edf->becf",
+                                 e=cfg.n_experts, m=ecfg.max_batch * c,
+                                 k=cfg.d_model, n=cfg.d_ff)
+            self.moe_plan = exec_plan.describe("grouped_matmul", pol,
+                                               **self._moe_ctx)
         if ecfg.s_max % ecfg.prefill_chunk:
             # the last chunk's fixed-size window must stay inside the
             # staging cache (dynamic_update_slice clamps, which would
@@ -936,6 +949,32 @@ class Engine:
                 # format width (quantized pages make residency cheap)
                 "resident_prefix_bytes": resident["paged"] * n_attn,
             })
+        if self.cfg.is_moe:
+            # re-describe like the decode plan: which grouped kernel the
+            # expert contraction actually ran
+            self.moe_plan = exec_plan.describe("grouped_matmul", self.pol,
+                                               **self._moe_ctx)
+            cfg = self.cfg
+            n_mats = 3 if cfg.act == "silu" else 2
+            n_w = (cfg.n_layers * n_mats * cfg.n_experts
+                   * cfg.d_model * cfg.d_ff)
+            w_bytes = operand_nbytes(n_w, self.pol.fmt_weights,
+                                     packed=self.pol.packed)
+            rep.update({
+                "moe_experts": cfg.n_experts,
+                "moe_top_k": cfg.top_k,
+                "moe_grouped_route": self.moe_plan["route"],
+                "moe_grouped_backend": self.moe_plan["backend"],
+                "moe_grouped_selection": self.moe_plan["selection"],
+                "moe_grouped_bytes_per_step_layer":
+                    self.moe_plan["bytes_moved"],
+                # expert weights through the grouped route's operand
+                # interface, all layers x (gate/up/down) mats — vs the
+                # f32 residency the seed's experts burned
+                "expert_w_bytes": w_bytes,
+                "expert_w_bytes_f32": 4 * n_w,
+                "expert_w_reduction_vs_f32": 4 * n_w / w_bytes,
+            })
         return rep
 
 
@@ -985,4 +1024,14 @@ def format_report(rep: dict, policy: str) -> str:
            if rep.get("tp", 1) > 1 else "")
         + (f"\ntp: requested {rep['tp_requested']}, serving replicated — "
            f"{rep['tp_fallback_reason']}"
-           if "tp_fallback_reason" in rep else ""))
+           if "tp_fallback_reason" in rep else "")
+        + (f"\nmoe: {rep['moe_experts']} experts top-{rep['moe_top_k']}, "
+           f"grouped via {rep['moe_grouped_route']} "
+           f"[{rep['moe_grouped_backend']}, "
+           f"{rep['moe_grouped_selection']}]; expert weights "
+           f"{rep['expert_w_bytes'] / mb:.2f} MB at format width vs f32 "
+           f"{rep['expert_w_bytes_f32'] / mb:.2f} MB "
+           f"({rep['expert_w_reduction_vs_f32']:.1f}x), "
+           f"{rep['moe_grouped_bytes_per_step_layer'] / 1e3:.1f} KB "
+           "expert operands per step/layer"
+           if "moe_experts" in rep else ""))

@@ -117,6 +117,10 @@ SHAPE_CLASSES = (
     ShapeClass("matmul", "gemm_prefill",
                lambda ctx: ctx.get("m") is not None and ctx["m"] > 16,
                dict(w_dtype="float32", m=128, k=128, n=128)),
+    ShapeClass("grouped_matmul", "moe_experts",
+               lambda ctx: ctx.get("e") is not None,
+               dict(w_dtype="float32", eq="gti,gio->gto", e=4, m=16,
+                    k=64, n=64)),
     ShapeClass("flash_attn", "flash_prefill",
                lambda ctx: ctx.get("sq", 1) > 1
                and not ctx.get("has_valid", False),
@@ -143,6 +147,7 @@ SHAPE_CLASSES = (
 # routes ignore the policy — the ctx fmt/pack bits drive them)
 OP_POLICIES = {
     "matmul": ("fp8_dpa_fused", "fp4_dpa_packed"),
+    "grouped_matmul": ("fp8_dpa_fused", "fp4_dpa_packed"),
     "flash_attn": ("attn_fp8_dpa", "fp32"),
     "paged_decode": ("kv4_attn8_packed",),
     "verify_attn": ("kv4_attn8_packed",),
@@ -487,6 +492,11 @@ def _cutout(op: str, cls_name: str, pol):
         x = jax.random.normal(ks[0], (rep["m"], rep["k"]))
         w = jax.random.normal(ks[1], (rep["k"], rep["n"])) * 0.5
         return (x, w, pol), {}
+    if op == "grouped_matmul":
+        ks = jax.random.split(jax.random.PRNGKey(4), 2)
+        x = jax.random.normal(ks[0], (rep["e"], rep["m"], rep["k"]))
+        w = jax.random.normal(ks[1], (rep["e"], rep["k"], rep["n"])) * 0.5
+        return (x, w, pol), dict(eq=rep["eq"])
     if op == "flash_attn":
         b, h, kv, hd = 2, 4, 2, 16
         ks = jax.random.split(jax.random.PRNGKey(1), 3)

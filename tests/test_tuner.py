@@ -444,6 +444,48 @@ def test_bytes_model_matmul_matches_nbytes(preset):
         assert 0.5 <= model / actual <= 2.0, (route, model, actual)
 
 
+def _grouped_actual(pol, e, m, k, n, *, packed):
+    from repro.core.packing import pack_fp4_axis
+    from repro.kernels.ops import _quant_operand
+    ks = jax.random.split(jax.random.PRNGKey(12), 2)
+    x = jax.random.normal(ks[0], (e, m, k))
+    w = jax.random.normal(ks[1], (e, k, n))
+    xq, _ = _quant_operand(x, pol.fmt_acts, axis_scale=-1)
+    wq, _ = _quant_operand(w, pol.fmt_weights, axis_scale=1)
+    if packed and pol.packed and pol.fmt_acts == "fp4_e2m1":
+        xq = pack_fp4_axis(xq, 2)
+    if packed and pol.packed and pol.fmt_weights == "fp4_e2m1":
+        wq = pack_fp4_axis(wq, 1)
+    return np.asarray(xq).nbytes + np.asarray(wq).nbytes
+
+
+@pytest.mark.parametrize("preset", ["fp8_dpa_fused", "fp4_dpa_packed"])
+def test_bytes_model_grouped_matmul_matches_nbytes(preset):
+    """Declared grouped bytes vs the real quantized (and, for the kernel
+    routes, packed) operand stacks' nbytes — within 2x, every grouped
+    route that declares a model."""
+    pol = get_policy(preset)
+    e, m, k, n = 4, 16, 64, 48
+    ctx = dict(e=e, m=m, k=k, n=n, eq="gti,gio->gto",
+               w_dtype="float32")
+    actual = _grouped_actual(pol, e, m, k, n, packed=True)
+    for route in ("pallas_grouped_fused", "pallas_grouped_prequant"):
+        model = exec_plan.route("grouped_matmul", route).bytes_moved(pol,
+                                                                     ctx)
+        assert 0.5 <= model / actual <= 2.0, (route, model, actual)
+    # the wide routes traverse both stacks at f32 width
+    wide = 4 * (e * m * k + e * k * n)
+    for route in ("xla_fake_quant", "xla_f32"):
+        model = exec_plan.route("grouped_matmul", route).bytes_moved(pol,
+                                                                     ctx)
+        assert 0.5 <= model / wide <= 2.0, (route, model, wide)
+    # native-narrow: format width, never packed
+    narrow = _grouped_actual(pol, e, m, k, n, packed=False)
+    model = exec_plan.route("grouped_matmul",
+                            "xla_native_narrow").bytes_moved(pol, ctx)
+    assert 0.5 <= model / narrow <= 2.0, (model, narrow)
+
+
 def test_bytes_model_paged_ops_match_nbytes():
     """The paged-op models = (declared pass count) x (view rows at the
     cache's format width): recompute against the real gathered-view and
@@ -511,6 +553,11 @@ def test_every_bytes_model_covered():
     have = {(e.op, e.name) for op in exec_plan.ops()
             for e in exec_plan.candidates(op) if e.bytes_moved}
     covered = {("matmul", "pallas_fused"), ("matmul", "pallas_prequant"),
+               ("grouped_matmul", "pallas_grouped_fused"),
+               ("grouped_matmul", "pallas_grouped_prequant"),
+               ("grouped_matmul", "xla_native_narrow"),
+               ("grouped_matmul", "xla_fake_quant"),
+               ("grouped_matmul", "xla_f32"),
                ("decode_attn", "xla_dpa_decode"),
                ("paged_decode", "pallas_block_table"),
                ("paged_decode", "jnp_gather"),
