@@ -40,6 +40,15 @@ cache prices them at live tokens (page-granular).  Rows report
                                cost the same as verifies — the
                                throughput win needs the 8x fp4 DPA
                                rate the hwmodel prices).
+  engine/adaptive_spec       : the acceptance-feedback draft controller
+                               (`repro.runtime.controller`) on mixed
+                               traffic vs each static draft rung.
+                               switches is pinned >= 1 (the ladder
+                               really moves) and round_eff_vs_worst >=
+                               1 (per draft+verify round, adaptive
+                               emits at least as much as the worst
+                               static rung — deterministic, unlike the
+                               tokens/s wall tripwire).
 """
 from __future__ import annotations
 
@@ -196,6 +205,71 @@ def spec_decode():
              f"acceptance_fp4={rep['acceptance_rate']:.2f}x "
              f"eff_tokens_per_round={rep['eff_tokens_per_round']:.2f}x "
              f"spec_vs_plain={us_spec / us_plain:.2f}x "
+             f"tokens_per_s={rep['tokens_per_s']:.1f}")]
+
+
+def adaptive_spec():
+    """Adaptive trans-precision drafting vs each static draft rung on
+    mixed (heterogeneous) traffic.
+
+    The controller starts on the cheapest rung (fp4) and walks the
+    ladder on acceptance feedback; random-init weights keep fp4
+    acceptance low, so the run provably switches (switches is pinned
+    >= 1).  round_eff_vs_worst — adaptive emitted-tokens-per-round over
+    the *worst* static rung's — is the headline tripwire: every rung
+    runs the same draft k, so a round is a fixed unit of draft+verify
+    work and the ratio is deterministic (wall clocks under Pallas
+    interpret mode are far too noisy to gate on).  It is
+    penalty-inclusive: rung-grouped ticks fragment the batch into one
+    round per live rung, and those smaller rounds drag the adaptive
+    numerator down.  Per unit of draft+verify work the controller must
+    still emit at least as much as pinning the worst rung for the whole
+    workload.  tokens_per_s stays a loose wall-clock CPU tripwire."""
+    import time
+
+    import jax
+
+    from repro.configs import get_config, reduce_config
+    from repro.launch.engine import Engine, EngineConfig, SpecConfig, \
+        synthetic_workload
+    from repro.models import build_model
+    from repro.runtime.controller import ControllerConfig, default_ladder
+
+    cfg = reduce_config(get_config("qwen3-4b")).replace(
+        policy="kv4_attn8_packed")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    # S_max = 128: mixed traffic stretches prompts to 4x16=64 and gens
+    # to 4x8=32; the pool holds 4 such requests plus scratch
+    ecfg = EngineConfig(page_size=8, n_pages=96, max_batch=4,
+                        max_pages_per_req=16, token_budget=32,
+                        prefill_chunk=8)
+    k, ladder = 2, default_ladder(cfg.policy)
+
+    def workload(seed):
+        return synthetic_workload(6, vocab=cfg.vocab_size, seed=seed,
+                                  prompt_range=(8, 16), gen_range=(4, 8),
+                                  mixed=0.3)
+
+    def run(**kw):
+        engine = Engine(model, params, ecfg, **kw)
+        engine.run(workload(seed=1))     # warm-up compiles every view
+        engine.reset_stats()
+        reqs = workload(seed=0)
+        t0 = time.perf_counter()
+        rep = engine.run(reqs)
+        return (time.perf_counter() - t0) * 1e6, rep
+
+    static_eff = {name: run(spec=SpecConfig(name, k=k))[1]
+                  ["eff_tokens_per_round"] for name in ladder}
+    acfg = ControllerConfig(ladder, k=k, start=0, dwell=1)
+    us_adapt, rep = run(adaptive=acfg)
+    worst = min(static_eff.values())
+    return [("engine/adaptive_spec", us_adapt,
+             f"round_eff_vs_worst={rep['eff_tokens_per_round'] / worst:.2f}x "
+             f"switches={float(rep['adaptive_switches']):.0f}x "
+             f"acceptance={rep['acceptance_rate']:.2f}x "
+             f"eff_tokens_per_round={rep['eff_tokens_per_round']:.2f}x "
              f"tokens_per_s={rep['tokens_per_s']:.1f}")]
 
 
@@ -446,8 +520,8 @@ def tuned_vs_static():
 
 
 ALL = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather,
-       spec_decode, prefix_cache, tp_collective_bytes, moe_grouped_dpa,
-       tuned_vs_static]
+       spec_decode, adaptive_spec, prefix_cache, tp_collective_bytes,
+       moe_grouped_dpa, tuned_vs_static]
 SMOKE = [paged_cache_bytes, engine_decode_rate, paged_decode_kernel_vs_gather,
-         spec_decode, prefix_cache, tp_collective_bytes, moe_grouped_dpa,
-         tuned_vs_static]
+         spec_decode, adaptive_spec, prefix_cache, tp_collective_bytes,
+         moe_grouped_dpa, tuned_vs_static]

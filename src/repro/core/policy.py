@@ -143,6 +143,15 @@ POLICIES = {
                                            fmt_attn="fp4_e2m1",
                                            fmt_kv="fp4_e2m1",
                                            kv_packed=True),
+    # fp16-class draft rung over the packed-fp4 cache: fp16 operands on
+    # the linears and both attention matmuls (2-term DPA, the most
+    # precise Table-I mode above fp32) while KV storage stays fp4 packed
+    # — the top of the adaptive draft ladder for fp4-cache serving
+    # presets (`repro.runtime.controller.DEFAULT_LADDERS`)
+    "w16a16_kv4_attn16": TransPrecisionPolicy("fp16", "fp16",
+                                              fmt_attn="fp16",
+                                              fmt_kv="fp4_e2m1",
+                                              kv_packed=True),
     # full serving path: packed-fp4 weights + fused fp8 activations on the
     # linears, fp8 DPA attention, packed-fp4 KV cache
     "w4a8_kv4_attn8": TransPrecisionPolicy("fp4_e2m1", "fp8_e4m3",

@@ -74,6 +74,25 @@ holding only rejected-draft rows after every round.  The token budget
 prices a round at its real work: k draft + k+1 verify tokens per live
 request.
 
+Adaptive drafting (`repro.runtime.controller.ControllerConfig`): the
+runtime analogue of the paper's mode register.  The engine pre-builds
+one draft view per ladder rung at construction — every rung shares the
+params and the page pool (`validate_policy_pair` against the serving
+policy), each rung's ``paged_decode`` route resolved through the
+exec-plan (tuned-DB consult included) — and a pure per-request feedback
+controller demotes drafts toward fp4 while the acceptance EMA stays
+high and promotes toward fp8/fp16 when it sags (hysteresis + dwell, no
+flapping).  Each scheduler tick batches live requests *by current rung*
+and runs one speculative round per rung group; requests on other rungs
+ride the fixed-shape batch as ghosts (their stray writes land at rows
+>= pos — stale territory every round rewrites before reading — or on
+the scratch page, never over committed history).  Page reservations
+size against the ladder-wide max draft k, so a rung switch can never
+violate the no-OOM invariant.  Rejection sampling makes the output
+distribution invariant to which rung drafted; greedy adaptive output is
+token-for-token the plain engine's (pinned by
+`tests/test_adaptive_engine.py`, adversarial controllers included).
+
 Numerics contract: every path reuses the PR-2 quantized-cache machinery
 (same `quant_rows_grid` recipe, same dequant-in-prologue attention), and
 paging is pure relayout, so per-request greedy outputs are bit-identical
@@ -99,6 +118,8 @@ from repro.core import kvcache as KV
 from repro.core.packing import operand_nbytes
 from repro.core.policy import get_policy
 from repro.distributed import tp as TP
+from repro.runtime import controller as CTRL
+from repro.runtime.controller import ControllerConfig
 from repro.serving import sampler as SMP
 from repro.serving import spec_decode as SPD
 from repro.serving.prefix_cache import PrefixCache, PrefixMatch
@@ -147,6 +168,8 @@ class Request:
     out_tokens: list = dataclasses.field(default_factory=list)
     pages: list = dataclasses.field(default_factory=list)
     reserved_left: int = 0       # reserved-but-uncommitted pages (spec mode)
+    rung: int = 0                # current draft-ladder rung (adaptive mode)
+    ctrl: object = None          # ControllerState (adaptive mode)
     slot: int = -1
     pos: int = 0                 # tokens written to the cache so far
     prefill_done: int = 0
@@ -171,8 +194,8 @@ class Request:
 
 def synthetic_workload(n_requests: int, *, vocab: int, seed: int = 0,
                        rate: float = 0.0, prompt_range=(8, 32),
-                       gen_range=(4, 16),
-                       shared_prefix: int = 0) -> List[Request]:
+                       gen_range=(4, 16), shared_prefix: int = 0,
+                       mixed: float = 0.0) -> List[Request]:
     """Open-loop synthetic traffic: Poisson arrivals (exponential
     inter-arrival at `rate` req/s; rate 0 = all arrive at t=0), prompt
     and output lengths uniform over the given inclusive ranges.
@@ -180,17 +203,35 @@ def synthetic_workload(n_requests: int, *, vocab: int, seed: int = 0,
     `shared_prefix` > 0 prepends the same `shared_prefix` drawn tokens
     to every prompt — a system-prompt workload, the prefix cache's
     target shape (the default 0 leaves the RNG stream, and so existing
-    workloads, untouched)."""
+    workloads, untouched).
+
+    `mixed` > 0 makes the traffic heterogeneous: each request is a
+    long-prompt/long-gen class member with probability `mixed` — prompt
+    length uniform over [2*hi, 4*hi] of `prompt_range`, gen likewise of
+    `gen_range` — the shape the adaptive draft controller is for (long
+    generations give the acceptance EMA time to move the rung).  Every
+    long-class draw (the class coin, lengths, AND tokens) comes from a
+    *forked* RNG stream keyed (seed, 1), so the default ``mixed=0``
+    leaves the base stream — and every existing workload and
+    seed-determinism pin — byte-identical."""
     rng = np.random.default_rng(seed)
+    hetero = np.random.default_rng([seed, 1]) if mixed > 0 else None
     arrivals = np.cumsum(rng.exponential(1.0 / rate, n_requests)) \
         if rate > 0 else np.zeros(n_requests)
     prefix = (rng.integers(0, vocab, size=shared_prefix).astype(np.int32)
               if shared_prefix > 0 else None)
     reqs = []
     for i in range(n_requests):
-        s0 = int(rng.integers(prompt_range[0], prompt_range[1] + 1))
-        gen = int(rng.integers(gen_range[0], gen_range[1] + 1))
-        prompt = rng.integers(0, vocab, size=s0).astype(np.int32)
+        if hetero is not None and hetero.random() < mixed:
+            s0 = int(hetero.integers(2 * prompt_range[1],
+                                     4 * prompt_range[1] + 1))
+            gen = int(hetero.integers(2 * gen_range[1],
+                                      4 * gen_range[1] + 1))
+            prompt = hetero.integers(0, vocab, size=s0).astype(np.int32)
+        else:
+            s0 = int(rng.integers(prompt_range[0], prompt_range[1] + 1))
+            gen = int(rng.integers(gen_range[0], gen_range[1] + 1))
+            prompt = rng.integers(0, vocab, size=s0).astype(np.int32)
         if prefix is not None:
             prompt = np.concatenate([prefix, prompt])
         reqs.append(Request(rid=i, prompt=prompt, max_new=gen,
@@ -211,16 +252,39 @@ def _attn_group_kinds(cfg):
     return pattern, n_groups, tail
 
 
+@dataclasses.dataclass
+class _Rung:
+    """One pre-built draft view on the adaptive ladder: the rung's
+    policy/model share the serving params and page pool; only the
+    compute routing (and jit'd step functions) differ per rung."""
+    name: str
+    k: int
+    pol: object                  # validated TransPrecisionPolicy
+    model: object                # serving model rebuilt under the rung
+    plan: dict                   # paged_decode route description
+    verify_plan: dict            # verify_attn route at sq = k + 1
+    draft_fn: object             # jit'd draft step (donates caches)
+    accept_fn: object            # jit'd rejection-sampling acceptance
+
+
 class Engine:
     """Continuous-batching engine bound to one model + params.
 
     `sampler` selects the token-draw rule (default: greedy argmax);
     `spec` turns on self-speculative decoding (draft under
-    `spec.draft_policy`, verify under the model's own policy)."""
+    `spec.draft_policy`, verify under the model's own policy);
+    `adaptive` replaces the single static draft policy with a
+    `ControllerConfig` precision ladder walked per request by the
+    acceptance-feedback controller (`repro.runtime.controller`)."""
 
     def __init__(self, model, params, ecfg: EngineConfig, *,
                  sampler: Optional[SamplerConfig] = None,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 adaptive: Optional[ControllerConfig] = None):
+        if spec is not None and adaptive is not None:
+            raise ValueError("pass spec= (one static draft policy) or "
+                             "adaptive= (a controller-walked ladder), "
+                             "not both")
         cfg = model.cfg
         pol = get_policy(cfg.policy)
         # tensor parallelism: a (1, tp) host mesh whose "model" axis
@@ -313,6 +377,35 @@ class Engine:
                                       donate_argnums=(2,))
             self._accept_fn = jax.jit(
                 SPD.make_accept_fn(self.sampler, spec.k))
+        self.adaptive = adaptive
+        self.rungs: List[_Rung] = []
+        if adaptive is not None:
+            # one draft view per rung, all sharing params and page pool:
+            # validate_policy_pair pins the shared-cache precondition,
+            # and each rung's paged_decode route resolves through the
+            # exec-plan (tuned-DB consult included) at construction, so
+            # a bad ladder entry fails here, not mid-request
+            from repro.models import build_model
+            for name, rk in zip(adaptive.ladder, adaptive.rung_ks):
+                rpol = SPD.validate_policy_pair(name, pol)
+                rmodel = build_model(cfg.replace(policy=name))
+                self.rungs.append(_Rung(
+                    name=name, k=rk, pol=rpol, model=rmodel,
+                    plan=exec_plan.describe("paged_decode", rpol,
+                                            **self._plan_ctx),
+                    verify_plan=exec_plan.describe("verify_attn", pol,
+                                                   sq=rk + 1,
+                                                   **self._plan_ctx),
+                    draft_fn=jax.jit(SPD.make_draft_step(rmodel,
+                                                         self.sampler),
+                                     donate_argnums=(2,)),
+                    accept_fn=jax.jit(SPD.make_accept_fn(self.sampler,
+                                                         rk))))
+            self._verify_fn = jax.jit(self.model.decode_step,
+                                      donate_argnums=(2,))
+            # overridable seam: tests install adversarial controllers
+            # (e.g. switch-every-round) through this attribute
+            self._ctrl_step = CTRL.step
         self.prefix = (PrefixCache(ecfg.page_size, self.alloc)
                        if ecfg.prefix_cache else None)
         self.slots: List[Optional[Request]] = [None] * ecfg.max_batch
@@ -330,6 +423,14 @@ class Engine:
         self.prefix_hits = 0
         self.prefill_tokens_saved = 0
         self.cow_copies = 0
+        self.rung_rounds = [0] * len(self.rungs)
+        self.rung_drafted = [0] * len(self.rungs)
+        self.rung_accepted = [0] * len(self.rungs)
+        self.rung_emitted = [0] * len(self.rungs)
+        self.rung_wall = [0.0] * len(self.rungs)
+        self.ctrl_switches = 0
+        self.ctrl_demotes = 0
+        self.ctrl_promotes = 0
 
     def _make_decode_step(self):
         """The jit'd plain decode step: model step + per-request sampling
@@ -346,6 +447,13 @@ class Engine:
 
     @property
     def _spec_k(self) -> int:
+        """Draft-window rows priced into reservations and the submit
+        guard.  Adaptive mode prices the *ladder-wide max* k: a rung
+        switch mid-request must never grow a request past what was
+        reserved at admission (the no-OOM invariant survives any
+        controller trajectory)."""
+        if self.adaptive is not None:
+            return self.adaptive.max_k
         return self.spec.k if self.spec is not None else 0
 
     # -- cache plumbing ----------------------------------------------------
@@ -566,6 +674,9 @@ class Engine:
                     # the source's content no longer matters to us
                     self._cow_copy(src, req.pages[len(shared)], rows)
                     self.alloc.free([src])
+            if self.adaptive is not None:
+                req.rung = self.adaptive.start_rung
+                req.ctrl = CTRL.init_state(self.adaptive)
             req.slot, req.state, req.t_admit = slot, PREFILL, now
             self.slots[slot] = req
             # the table row stays scratch until prefill lands: a PREFILL
@@ -692,19 +803,28 @@ class Engine:
             self._maybe_finish(r, tok, now)
         return len(live)
 
-    def _spec_decode_batch(self, now: float) -> int:
-        """One speculative round over every DECODE-state slot: k draft
+    def _spec_round(self, now: float, live: List[Request], k: int,
+                    draft_fn, accept_fn, rung_i: Optional[int] = None) -> int:
+        """One speculative round over the `live` participants: k draft
         steps under the draft policy, one k+1-token verify pass under
         the serving policy, rejection-sampled acceptance, then paged-KV
         rollback of pages holding only rejected rows.  Returns the
         token-budget cost: the round really runs 2k+1 model tokens per
-        live request (k draft + k+1 verify)."""
-        e, k = self.ecfg, self.spec.k
-        live, tokens, positions, rids = self._live_batch()
-        if not live:
-            return 0
-        # commit pages for the draft window (rows pos .. pos+k) and push
-        # the grown tables to the device before anything reads them
+        participant (k draft + k+1 verify).
+
+        `live` may be a *subset* of the DECODE slots (adaptive mode
+        batches by rung).  The fixed-shape batch still carries every
+        DECODE slot at its real (last token, position) — non-
+        participants are ghost riders: their stray K/V writes land at
+        rows >= pos (stale territory their own next round rewrites
+        before any read) or on the scratch page (rows past their
+        committed tables), never over committed history; their sampled
+        draws burn no RNG state (stateless threefry keyed on (seed,
+        rid, index)); and only participants' outputs are read back."""
+        e = self.ecfg
+        _, tokens, positions, rids = self._live_batch()
+        # commit pages for the participants' draft window (rows pos ..
+        # pos+k) and push the grown tables before anything reads them
         dirty = [self._commit_pages(r, r.pos + k + 1) for r in live]
         if any(dirty) or self._tables_dirty:
             self._sync_tables()
@@ -715,7 +835,7 @@ class Engine:
         cur, drafts, draft_probs = toks, [], []
         with self._tp_scope():
             for i in range(k):
-                d, q, self.caches = self._draft_fn(
+                d, q, self.caches = draft_fn(
                     self.params, {"tokens": cur, "index": pos + i},
                     self.caches, rid_arr)
                 drafts.append(d)
@@ -726,12 +846,14 @@ class Engine:
                 self.params,
                 {"tokens": jnp.concatenate([toks, drafts], axis=1),
                  "index": pos}, self.caches)
-        emitted, acc = self._accept_fn(
+        emitted, acc = accept_fn(
             drafts, None if self.sampler.greedy
             else jnp.stack(draft_probs, axis=1), logits, rid_arr, pos)
         emitted, acc = np.asarray(emitted), np.asarray(acc)
         self.spec_rounds += 1
         self.spec_request_rounds += len(live)
+        if rung_i is not None:
+            self.rung_rounds[rung_i] += 1
         for r in live:
             a = int(acc[r.slot])
             self.drafted += k
@@ -745,11 +867,57 @@ class Engine:
             r.out_tokens.extend(emit)
             r.pos += len(emit)
             self.spec_emitted += len(emit)
+            if rung_i is not None:
+                self.rung_drafted[rung_i] += k
+                self.rung_accepted[rung_i] += a
+                self.rung_emitted[rung_i] += len(emit)
             if r.n_generated >= r.max_new or emit[-1] == e.eos_id:
                 self._finish(r, now)
             else:
                 self._rollback(r, r.pos)
+                if rung_i is not None:
+                    # pure feedback update — no wall clock, no RNG; the
+                    # seam is overridable so tests can drive adversarial
+                    # (e.g. switch-every-round) trajectories
+                    r.ctrl, nxt = self._ctrl_step(self.adaptive, r.ctrl,
+                                                  a, k)
+                    if nxt != r.rung:
+                        self.ctrl_switches += 1
+                        if nxt < r.rung:
+                            self.ctrl_demotes += 1
+                        else:
+                            self.ctrl_promotes += 1
+                        r.rung = nxt
         return len(live) * (2 * k + 1)
+
+    def _spec_decode_batch(self, now: float) -> int:
+        """One static-draft speculative round over every DECODE slot."""
+        live = [r for r in self.slots if r is not None and r.state == DECODE]
+        if not live:
+            return 0
+        return self._spec_round(now, live, self.spec.k, self._draft_fn,
+                                self._accept_fn)
+
+    def _spec_decode_all(self, now: float) -> int:
+        """Adaptive tick: batch live requests by current rung, run one
+        speculative round per non-empty rung group (groups snapshot up
+        front — a request that switches rungs during its own round is
+        not served twice in one tick)."""
+        live = [r for r in self.slots if r is not None and r.state == DECODE]
+        if not live:
+            return 0
+        groups = [[r for r in live if r.rung == i]
+                  for i in range(len(self.rungs))]
+        cost = 0
+        for i, group in enumerate(groups):
+            if not group:
+                continue
+            rg = self.rungs[i]
+            t0 = time.monotonic()
+            cost += self._spec_round(now, group, rg.k, rg.draft_fn,
+                                     rg.accept_fn, rung_i=i)
+            self.rung_wall[i] += time.monotonic() - t0
+        return cost
 
     def _maybe_finish(self, req: Request, tok: int, now: float):
         if req.n_generated >= req.max_new or tok == self.ecfg.eos_id:
@@ -760,8 +928,12 @@ class Engine:
         leftover token budget on prefill chunks."""
         self._admit(now)
         budget = self.ecfg.token_budget
-        budget -= (self._spec_decode_batch(now) if self.spec is not None
-                   else self._decode_batch(now))
+        if self.adaptive is not None:
+            budget -= self._spec_decode_all(now)
+        elif self.spec is not None:
+            budget -= self._spec_decode_batch(now)
+        else:
+            budget -= self._decode_batch(now)
         while budget > 0:
             pre = [r for r in self.slots
                    if r is not None and r.state == PREFILL]
@@ -810,6 +982,14 @@ class Engine:
         self.prefix_hits = 0
         self.prefill_tokens_saved = 0
         self.cow_copies = 0
+        self.rung_rounds = [0] * len(self.rungs)
+        self.rung_drafted = [0] * len(self.rungs)
+        self.rung_accepted = [0] * len(self.rungs)
+        self.rung_emitted = [0] * len(self.rungs)
+        self.rung_wall = [0.0] * len(self.rungs)
+        self.ctrl_switches = 0
+        self.ctrl_demotes = 0
+        self.ctrl_promotes = 0
         self.alloc.peak_in_use = self.alloc.in_use
 
     def run(self, requests: List[Request]) -> dict:
@@ -931,6 +1111,45 @@ class Engine:
                 "verify_route": self.verify_plan["route"],
                 "verify_backend": self.verify_plan["backend"],
             })
+        if self.adaptive is not None:
+            # per-rung breakdown; the global acceptance_rate stays the
+            # drafted-token-weighted aggregate over rungs (== the old
+            # scalar when the ladder has one rung)
+            tw = sum(self.rung_wall)
+            rungs = []
+            for i, rg in enumerate(self.rungs):
+                # re-describe per rung, like the decode plan above
+                rg.plan = exec_plan.describe("paged_decode", rg.pol,
+                                             **self._plan_ctx)
+                rungs.append({
+                    "policy": rg.name,
+                    "k": rg.k,
+                    "rounds": self.rung_rounds[i],
+                    "drafted": self.rung_drafted[i],
+                    "accepted": self.rung_accepted[i],
+                    "acceptance_rate": (self.rung_accepted[i]
+                                        / self.rung_drafted[i]
+                                        if self.rung_drafted[i] else 0.0),
+                    "emitted": self.rung_emitted[i],
+                    "wall_share": (self.rung_wall[i] / tw
+                                   if tw > 0 else 0.0),
+                    "draft_route": rg.plan["route"],
+                    "draft_backend": rg.plan["backend"],
+                })
+            rep.update({
+                "adaptive_ladder": [rg.name for rg in self.rungs],
+                "adaptive_switches": self.ctrl_switches,
+                "adaptive_demotes": self.ctrl_demotes,
+                "adaptive_promotes": self.ctrl_promotes,
+                "adaptive_rungs": rungs,
+                "spec_rounds": self.spec_rounds,
+                "acceptance_rate": (self.drafts_accepted / self.drafted
+                                    if self.drafted else 0.0),
+                "eff_tokens_per_round": (self.spec_emitted
+                                         / self.spec_request_rounds
+                                         if self.spec_request_rounds
+                                         else 0.0),
+            })
         if self.prefix is not None:
             e, cfg, pol = self.ecfg, self.cfg, self.pol
             n_attn = self._n_groups + self._n_tail
@@ -1009,6 +1228,21 @@ def format_report(rep: dict, policy: str) -> str:
            f"{rep['eff_tokens_per_round']:.2f} tokens/round over "
            f"{rep['spec_rounds']} rounds"
            if "spec_k" in rep else "")
+        + ((f"\nadaptive: {len(rep['adaptive_rungs'])}-rung ladder, "
+            f"{rep['adaptive_switches']} switches "
+            f"({rep['adaptive_demotes']} demote, "
+            f"{rep['adaptive_promotes']} promote); acceptance "
+            f"{rep['acceptance_rate']:.0%}, "
+            f"{rep['eff_tokens_per_round']:.2f} tokens/round over "
+            f"{rep['spec_rounds']} rounds\n"
+            + "\n".join(
+                f"  rung {i}: {r['policy']} (k={r['k']}) acceptance "
+                f"{r['acceptance_rate']:.0%}, {r['rounds']} rounds, "
+                f"{r['drafted']} drafted, {r['emitted']} emitted, "
+                f"{r['wall_share']:.0%} of spec wall via "
+                f"{r['draft_route']} [{r['draft_backend']}]"
+                for i, r in enumerate(rep["adaptive_rungs"])))
+           if "adaptive_rungs" in rep else "")
         + (f"\nprefix: {rep['prefix_hits']}/{rep['prefix_queries']} hits "
            f"({rep['prefix_hit_rate']:.0%}), "
            f"{rep['prefill_tokens_saved']} prefill tokens saved, "

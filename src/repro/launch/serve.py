@@ -104,11 +104,14 @@ def run_engine(cfg, model, args):
     """--engine mode: continuous batching over the paged quantized cache,
     driven by an open-loop synthetic workload.  --spec-draft turns on
     self-speculative decoding (draft under the named low-precision
-    policy, verify under --policy); --temperature/--top-k/--top-p select
-    sampling (default greedy)."""
+    policy, verify under --policy); --adaptive-draft replaces the static
+    draft policy with the acceptance-feedback precision ladder; --mixed
+    makes the traffic heterogeneous; --temperature/--top-k/--top-p
+    select sampling (default greedy)."""
     from repro.launch.engine import (Engine, EngineConfig, SamplerConfig,
                                      SpecConfig, format_report,
                                      synthetic_workload)
+    from repro.runtime.controller import ControllerConfig, default_ladder
     if args.tuned_db:
         # export first so every exec_plan.resolve() below (engine
         # construction included) consults the measured table
@@ -134,25 +137,39 @@ def run_engine(cfg, model, args):
                         prefill_chunk=args.prefill_chunk,
                         prefix_cache=args.prefix_cache,
                         tp=args.tp)
+    adaptive = None
+    if args.adaptive_draft:
+        if args.spec_draft:
+            raise SystemExit("--adaptive-draft replaces --spec-draft "
+                             "(the ladder covers the static draft "
+                             "policy); pass one or the other")
+        adaptive = ControllerConfig(default_ladder(cfg.policy),
+                                    k=args.spec_k)
     spec = SpecConfig(args.spec_draft, args.spec_k) if args.spec_draft \
         else None
-    spec_k = args.spec_k if spec else 0
-    if args.shared_prefix + args.prompt_len + args.gen + spec_k > ecfg.s_max:
+    spec_k = adaptive.max_k if adaptive else (args.spec_k if spec else 0)
+    # mixed traffic stretches the longest request to 4x the --gen /
+    # --prompt-len ceilings (see synthetic_workload); guard for that
+    p_max = 4 * args.prompt_len if args.mixed > 0 else args.prompt_len
+    g_max = 4 * args.gen if args.mixed > 0 else args.gen
+    if args.shared_prefix + p_max + g_max + spec_k > ecfg.s_max:
         raise SystemExit(
-            f"--shared-prefix {args.shared_prefix} + --prompt-len "
-            f"{args.prompt_len} + --gen {args.gen} (+ the {spec_k}-token "
-            f"draft window) exceeds the engine's S_max = {ecfg.s_max} "
-            "tokens/request; raise --max-pages-per-req or --page-size")
+            f"--shared-prefix {args.shared_prefix} + prompt {p_max} + "
+            f"gen {g_max}{' (4x for --mixed)' if args.mixed > 0 else ''} "
+            f"(+ the {spec_k}-token draft window) exceeds the engine's "
+            f"S_max = {ecfg.s_max} tokens/request; raise "
+            "--max-pages-per-req or --page-size")
     sampler = SamplerConfig(temperature=args.temperature, top_k=args.top_k,
                             top_p=args.top_p, seed=args.seed)
     params = model.init(jax.random.PRNGKey(0))
-    engine = Engine(model, params, ecfg, sampler=sampler, spec=spec)
+    engine = Engine(model, params, ecfg, sampler=sampler, spec=spec,
+                    adaptive=adaptive)
     reqs = synthetic_workload(
         args.requests, vocab=cfg.vocab_size, seed=args.seed,
         rate=args.rate, prompt_range=(max(1, args.prompt_len // 2),
                                       args.prompt_len),
         gen_range=(max(1, args.gen // 2), args.gen),
-        shared_prefix=args.shared_prefix)
+        shared_prefix=args.shared_prefix, mixed=args.mixed)
     rep = engine.run(reqs)
     print(format_report(rep, cfg.policy))
     if engine.finished:
@@ -205,6 +222,11 @@ def main(argv=None):
     eg.add_argument("--shared-prefix", type=int, default=0,
                     help="prepend this many shared system-prompt tokens "
                          "to every synthetic request")
+    eg.add_argument("--mixed", type=float, default=0.0,
+                    help="fraction of long-prompt/long-gen requests in "
+                         "the synthetic workload (0 = homogeneous; drawn "
+                         "from a forked RNG stream, so 0 is byte-"
+                         "identical to earlier releases)")
     eg.add_argument("--json", default="",
                     help="also dump the engine report to this JSON file")
     eg.add_argument("--tuned-db", default="",
@@ -226,6 +248,12 @@ def main(argv=None):
                          "decoding (e.g. w4a4_kv4_attn4; empty = off)")
     sg.add_argument("--spec-k", type=int, default=4,
                     help="draft tokens per speculative round")
+    sg.add_argument("--adaptive-draft", action="store_true",
+                    help="adaptive trans-precision drafting: walk the "
+                         "default draft-precision ladder for --policy "
+                         "with the acceptance-feedback controller "
+                         "(repro.runtime.controller) instead of one "
+                         "static --spec-draft policy")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)

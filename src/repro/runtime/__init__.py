@@ -1,1 +1,1 @@
-from . import checkpoint, fault  # noqa: F401
+from . import checkpoint, controller, fault  # noqa: F401

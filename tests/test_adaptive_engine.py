@@ -1,0 +1,295 @@
+"""Adaptive trans-precision drafting: engine-side conformance.
+
+The load-bearing claims (`repro.launch.engine` + `repro.runtime.
+controller` together):
+
+  1. Greedy adaptive output is token-for-token identical to the plain
+     (non-speculative) engine AND to static-draft spec engines, across
+     serving presets — whichever rung drafts, verify-and-accept emits
+     the serving policy's argmax tokens.
+  2. That identity survives an *adversarial* controller that switches
+     rungs every round (the controller seam is behavioural only, never
+     numerical).
+  3. Sampled adaptive mode is deterministic under a fixed seed and
+     drains cleanly.
+  4. The global `acceptance_rate` is the drafted-token-weighted
+     aggregate of the per-rung rates, and equals the static scalar for
+     a one-rung ladder.
+  5. Reservation accounting holds tick-by-tick across forced rung
+     switches mid-request with per-rung draft lengths: reservations are
+     priced at the ladder-wide max k, so no switch can OOM or leak.
+  6. `synthetic_workload(mixed=...)` is byte-identical to the old
+     stream at the default, deterministic, and actually heterogeneous
+     when enabled.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.launch.engine import (DECODE, Engine, EngineConfig, Request,
+                                 synthetic_workload)
+from repro.runtime import controller as C
+from repro.serving import SamplerConfig, SpecConfig
+
+ECFG = EngineConfig(page_size=8, n_pages=32, max_batch=3,
+                    max_pages_per_req=6, token_budget=16, prefill_chunk=8)
+LENS = [(9, 5), (14, 7), (5, 4)]
+K = 3
+SAMPLED = SamplerConfig(temperature=0.8, top_k=16, top_p=0.95, seed=7)
+
+# serving presets spanning both default-ladder cache layouts
+PRESETS = ["kv4_attn8_packed", "kv8_attn_f32"]
+
+
+@pytest.fixture(scope="module")
+def base():
+    from repro.configs import get_config, reduce_config
+    from repro.models import build_model
+    cfg = reduce_config(get_config("qwen3-4b"))
+    model = build_model(cfg.replace(policy=PRESETS[0]))
+    # params are policy-independent: one init serves every preset
+    return cfg, build_model, model.init(jax.random.PRNGKey(0))
+
+
+def _requests(vocab, seed=3):
+    rng = np.random.default_rng(seed)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, vocab, size=s0).astype(np.int32),
+                    max_new=g)
+            for i, (s0, g) in enumerate(LENS)]
+
+
+def _outputs(engine):
+    return {r.rid: list(r.out_tokens) for r in engine.finished}
+
+
+def _run(engine, vocab):
+    for r in _requests(vocab):
+        engine.submit(r)
+    now = 0.0
+    while engine.waiting or any(engine.slots):
+        engine.step(now)
+        now += 0.01
+    return _outputs(engine)
+
+
+def _adaptive_cfg(preset, **kw):
+    kw.setdefault("k", K)
+    kw.setdefault("start", 0)
+    kw.setdefault("dwell", 1)
+    return C.ControllerConfig(C.default_ladder(preset), **kw)
+
+
+def _every_round_cycler(cfg, state, accepted, drafted):
+    """Adversarial controller: hop to the next rung every single round,
+    ignoring the acceptance signal entirely."""
+    nxt = (state.rung + 1) % len(cfg.ladder)
+    return dataclasses.replace(state, rung=nxt,
+                               switches=state.switches + 1), nxt
+
+
+def _check_alloc_invariants(engine):
+    from repro.core import kvcache as KV
+    alloc = engine.alloc
+    live = [r for r in engine.slots if r is not None]
+    assert alloc.in_use == sum(len(r.pages) for r in live)
+    assert alloc.reserved == sum(r.reserved_left for r in live)
+    assert alloc.reserved <= alloc.n_free
+    assert alloc.in_use + alloc.n_free == alloc.capacity - 1
+    for r in live:
+        row = engine._table[r.slot]
+        if r.state == DECODE:
+            assert list(row[:len(r.pages)]) == r.pages
+            assert np.all(row[len(r.pages):] == KV.SCRATCH_PAGE)
+        else:
+            assert np.all(row == KV.SCRATCH_PAGE)
+
+
+# -----------------------------------------------------------------------------
+# 1 + 2. greedy identity: adaptive == plain == static draft, incl. adversarial
+# -----------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_greedy_adaptive_matches_plain_and_static(base, preset):
+    cfg, build_model, params = base
+    model = build_model(cfg.replace(policy=preset))
+    want = _run(Engine(model, params, ECFG), cfg.vocab_size)
+
+    acfg = _adaptive_cfg(preset)
+    eng = Engine(model, params, ECFG, adaptive=acfg)
+    assert _run(eng, cfg.vocab_size) == want
+    # the ladder actually moved (start=0 + imperfect fp4 acceptance)
+    assert eng.spec_rounds > 0
+
+    static = Engine(model, params, ECFG,
+                    spec=SpecConfig(acfg.ladder[0], K))
+    assert _run(static, cfg.vocab_size) == want
+
+
+@pytest.mark.parametrize("preset", PRESETS)
+def test_greedy_adaptive_adversarial_every_round_switch(base, preset):
+    """An every-round-switching controller exercises every rung's draft
+    view mid-request — and the emitted tokens still match the plain
+    engine exactly (rung choice is a performance decision, never an
+    output decision)."""
+    cfg, build_model, params = base
+    model = build_model(cfg.replace(policy=preset))
+    want = _run(Engine(model, params, ECFG), cfg.vocab_size)
+
+    eng = Engine(model, params, ECFG, adaptive=_adaptive_cfg(preset))
+    eng._ctrl_step = _every_round_cycler
+    assert _run(eng, cfg.vocab_size) == want
+    assert eng.ctrl_switches > 0
+    # more than one rung really drafted
+    assert sum(1 for n in eng.rung_rounds if n > 0) > 1
+
+
+# -----------------------------------------------------------------------------
+# 3. sampled mode: deterministic under a fixed seed, drains cleanly
+# -----------------------------------------------------------------------------
+
+def test_sampled_adaptive_deterministic_and_drains(base):
+    cfg, build_model, params = base
+    model = build_model(cfg.replace(policy=PRESETS[0]))
+    acfg = _adaptive_cfg(PRESETS[0])
+    runs = []
+    for _ in range(2):
+        eng = Engine(model, params, ECFG, sampler=SAMPLED, adaptive=acfg)
+        runs.append(_run(eng, cfg.vocab_size))
+        assert len(eng.finished) == len(LENS)
+        assert not any(eng.slots) and not eng.waiting
+        assert eng.alloc.in_use == 0 and eng.alloc.reserved == 0
+        for r in eng.finished:
+            assert len(r.out_tokens) <= r.max_new
+    assert runs[0] == runs[1]
+
+
+# -----------------------------------------------------------------------------
+# 4. acceptance_rate: rung-weighted aggregate, == static scalar for 1 rung
+# -----------------------------------------------------------------------------
+
+def test_acceptance_rate_is_rung_weighted_aggregate(base):
+    cfg, build_model, params = base
+    model = build_model(cfg.replace(policy=PRESETS[0]))
+    eng = Engine(model, params, ECFG, adaptive=_adaptive_cfg(PRESETS[0]))
+    eng._ctrl_step = _every_round_cycler       # spread rounds over rungs
+    _run(eng, cfg.vocab_size)
+    rep = eng.report(wall=1.0)
+    rungs = rep["adaptive_rungs"]
+    drafted = sum(r["drafted"] for r in rungs)
+    accepted = sum(r["accepted"] for r in rungs)
+    assert drafted == eng.drafted and accepted == eng.drafts_accepted
+    assert rep["acceptance_rate"] == pytest.approx(accepted / drafted)
+    # per-rung rates recompose into the global through drafted weights
+    agg = sum(r["acceptance_rate"] * r["drafted"] for r in rungs) / drafted
+    assert rep["acceptance_rate"] == pytest.approx(agg)
+    assert rep["adaptive_switches"] == eng.ctrl_switches > 0
+    assert sum(r["rounds"] for r in rungs) == rep["spec_rounds"]
+    ws = [r["wall_share"] for r in rungs if r["rounds"] > 0]
+    assert sum(ws) == pytest.approx(1.0)
+
+
+def test_one_rung_ladder_equals_static_spec_scalar(base):
+    """A degenerate one-rung ladder IS static drafting: same tokens,
+    same acceptance scalar — the aggregate reduces to the old number."""
+    cfg, build_model, params = base
+    model = build_model(cfg.replace(policy=PRESETS[0]))
+    draft = "w4a4_kv4_attn4"
+    static = Engine(model, params, ECFG, spec=SpecConfig(draft, K))
+    want = _run(static, cfg.vocab_size)
+    srep = static.report(wall=1.0)
+
+    one = C.ControllerConfig((draft,), k=K)
+    eng = Engine(model, params, ECFG, adaptive=one)
+    assert _run(eng, cfg.vocab_size) == want
+    rep = eng.report(wall=1.0)
+    assert rep["acceptance_rate"] == srep["acceptance_rate"]
+    assert rep["adaptive_switches"] == 0
+    assert rep["adaptive_rungs"][0]["acceptance_rate"] == \
+        srep["acceptance_rate"]
+
+
+# -----------------------------------------------------------------------------
+# 5. reservations: ladder-wide max k, tick-by-tick across forced switches
+# -----------------------------------------------------------------------------
+
+def test_reservation_accounting_across_forced_switches(base):
+    """Per-rung draft lengths (ks=(3,1,2)) under an every-round rung
+    cycler: every tick the allocator balances — committed pages match
+    live block tables, reservations cover the remainder — because
+    admission priced the ladder-wide max k, not the current rung's."""
+    cfg, build_model, params = base
+    model = build_model(cfg.replace(policy=PRESETS[0]))
+    acfg = C.ControllerConfig(C.default_ladder(PRESETS[0]), ks=(3, 1, 2))
+    eng = Engine(model, params, ECFG, adaptive=acfg)
+    eng._ctrl_step = _every_round_cycler
+    assert eng._spec_k == 3                    # max over (3, 1, 2)
+    for r in _requests(cfg.vocab_size):
+        eng.submit(r)
+    now, switched = 0.0, False
+    while eng.waiting or any(eng.slots):
+        eng.step(now)
+        now += 0.01
+        _check_alloc_invariants(eng)
+        switched = switched or eng.ctrl_switches > 0
+    assert switched
+    assert eng.alloc.in_use == 0 and eng.alloc.reserved == 0
+    assert len(eng.finished) == len(LENS)
+
+
+def test_submit_guard_prices_ladder_max_k(base):
+    cfg, build_model, params = base
+    model = build_model(cfg.replace(policy=PRESETS[0]))
+    acfg = C.ControllerConfig(C.default_ladder(PRESETS[0]), ks=(1, 1, 9))
+    eng = Engine(model, params, ECFG, adaptive=acfg)
+    # s_max = 48; 30 + 10 + max_k(9) = 49 > 48 must be refused up front,
+    # even though the *start* rung's k=1 would fit — a later promotion
+    # to the k=9 rung could otherwise overflow the block table
+    bad = Request(rid=0, prompt=np.zeros(30, np.int32), max_new=10)
+    with pytest.raises(ValueError, match="draft window"):
+        eng.submit(bad)
+
+
+# -----------------------------------------------------------------------------
+# 6. synthetic_workload mixed= knob
+# -----------------------------------------------------------------------------
+
+def test_workload_mixed_default_byte_identical():
+    a = synthetic_workload(8, vocab=97, seed=5, shared_prefix=2)
+    b = synthetic_workload(8, vocab=97, seed=5, shared_prefix=2, mixed=0.0)
+    for ra, rb in zip(a, b):
+        assert np.array_equal(ra.prompt, rb.prompt)
+        assert (ra.max_new, ra.arrival) == (rb.max_new, rb.arrival)
+
+
+def test_workload_mixed_deterministic_and_heterogeneous():
+    kw = dict(vocab=97, seed=5, prompt_range=(8, 16), gen_range=(4, 8),
+              mixed=0.5)
+    a = synthetic_workload(16, **kw)
+    b = synthetic_workload(16, **kw)
+    for ra, rb in zip(a, b):
+        assert np.array_equal(ra.prompt, rb.prompt)
+        assert ra.max_new == rb.max_new
+    longs = [r for r in a if r.n_prompt > 16]
+    shorts = [r for r in a if r.n_prompt <= 16]
+    assert longs and shorts                     # actually mixed
+    for r in longs:                             # the long class is 2-4x
+        assert 32 <= r.n_prompt <= 64
+        assert 16 <= r.max_new <= 32
+
+
+def test_workload_mixed_short_requests_ride_base_stream():
+    """Long-class draws come only from the forked stream, so the short
+    requests of a mixed workload are exactly the head of the unmixed
+    workload's request sequence."""
+    kw = dict(vocab=97, seed=5, prompt_range=(8, 16), gen_range=(4, 8))
+    plain = synthetic_workload(16, **kw)
+    mixed = synthetic_workload(16, mixed=0.5, **kw)
+    shorts = [r for r in mixed if r.n_prompt <= 16]
+    assert shorts
+    for rs, rp in zip(shorts, plain):
+        assert np.array_equal(rs.prompt, rp.prompt)
+        assert rs.max_new == rp.max_new

@@ -1,0 +1,185 @@
+"""Adaptive draft controller in isolation (`repro.runtime.controller`).
+
+The controller is pure — (state, observation) -> (state, rung), no wall
+clock, no RNG — so every property here is a plain function property:
+hysteresis (no flapping inside the dead band), monotone demote/promote
+on clean high/low-acceptance traces, dwell enforcement, and bit-exact
+replay determinism.  The engine-side integration (per-rung batching,
+reservations, output invariance) lives in tests/test_adaptive_engine.py.
+"""
+import pytest
+
+from repro.core.policy import POLICIES
+from repro.runtime import controller as C
+
+LADDER = ("w4a4_kv4_attn4", "w4a8_kv4_attn8", "w16a16_kv4_attn16")
+
+
+def _cfg(**kw):
+    kw.setdefault("ladder", LADDER)
+    return C.ControllerConfig(**kw)
+
+
+# -- config validation ----------------------------------------------------
+
+def test_config_rejects_unknown_rung():
+    with pytest.raises(ValueError, match="not a policy preset"):
+        _cfg(ladder=("w4a4_kv4_attn4", "no_such_policy"))
+
+
+def test_config_rejects_empty_ladder():
+    with pytest.raises(ValueError, match="at least one rung"):
+        _cfg(ladder=())
+
+
+def test_config_rejects_bad_thresholds():
+    with pytest.raises(ValueError, match="promote_below < demote_above"):
+        _cfg(demote_above=0.4, promote_below=0.6)
+    with pytest.raises(ValueError, match="promote_below < demote_above"):
+        _cfg(demote_above=0.5, promote_below=0.5)   # no dead band
+
+
+def test_config_rejects_bad_ks():
+    with pytest.raises(ValueError, match="entries for a"):
+        _cfg(ks=(2, 3))                              # 2 ks, 3 rungs
+    with pytest.raises(ValueError, match=">= 1"):
+        _cfg(ks=(2, 0, 3))
+
+
+def test_config_rejects_bad_dwell_alpha_start():
+    with pytest.raises(ValueError, match="dwell"):
+        _cfg(dwell=0)
+    with pytest.raises(ValueError, match="ema_alpha"):
+        _cfg(ema_alpha=0.0)
+    with pytest.raises(ValueError, match="start rung"):
+        _cfg(start=3)
+
+
+def test_rung_ks_and_max_k():
+    assert _cfg(k=5).rung_ks == (5, 5, 5)
+    cfg = _cfg(ks=(4, 2, 1))
+    assert cfg.rung_ks == (4, 2, 1)
+    assert cfg.max_k == 4
+    assert _cfg().start_rung == len(LADDER) - 1      # -1 = most precise
+    assert _cfg(start=0).start_rung == 0
+
+
+# -- monotone demote / promote --------------------------------------------
+
+def test_demotes_to_cheapest_on_high_acceptance():
+    cfg = _cfg(dwell=1)
+    rungs = C.replay(cfg, [(4, 4)] * 6)              # perfect acceptance
+    assert rungs[-1] == 0                            # reached the bottom
+    assert rungs == sorted(rungs, reverse=True)      # monotone downward
+
+
+def test_promotes_to_most_precise_on_low_acceptance():
+    cfg = _cfg(dwell=1, start=0)
+    rungs = C.replay(cfg, [(0, 4)] * 6)              # nothing accepted
+    assert rungs[-1] == len(LADDER) - 1
+    assert rungs == sorted(rungs)                    # monotone upward
+
+
+def test_clamped_at_ladder_ends():
+    cfg = _cfg(dwell=1, start=0)
+    assert C.replay(cfg, [(4, 4)] * 10)[-1] == 0     # can't demote past 0
+    cfg = _cfg(dwell=1)
+    assert C.replay(cfg, [(0, 4)] * 10)[-1] == len(LADDER) - 1
+
+
+# -- dwell ----------------------------------------------------------------
+
+def test_dwell_blocks_early_switch():
+    cfg = _cfg(dwell=3)
+    rungs = C.replay(cfg, [(4, 4)] * 3)
+    # rounds 1 and 2 sit inside the dwell; only round 3 may switch
+    assert rungs[:2] == [cfg.start_rung] * 2
+    assert rungs[2] == cfg.start_rung - 1
+
+
+def test_dwell_clock_resets_on_switch():
+    cfg = _cfg(dwell=2)
+    rungs = C.replay(cfg, [(4, 4)] * 6)
+    # a switch every `dwell` rounds, never faster
+    switches = [i for i in range(1, len(rungs)) if rungs[i] != rungs[i - 1]]
+    assert all(b - a >= cfg.dwell for a, b in zip(switches, switches[1:]))
+
+
+# -- hysteresis: no flapping ----------------------------------------------
+
+def test_dead_band_never_flaps():
+    """An EMA wandering strictly inside (promote_below, demote_above)
+    must never move the rung, however long the trace."""
+    cfg = _cfg(demote_above=0.75, promote_below=0.45, dwell=1, start=1)
+    # alternating 50% / 70% rates: every EMA value stays in (0.45, 0.75)
+    trace = [(2, 4), (3, 4)] * 20
+    rungs = C.replay(cfg, trace)
+    assert set(rungs) == {1}
+    state = C.init_state(cfg)
+    for obs in trace:
+        state, _ = C.step(cfg, state, *obs)
+    assert state.switches == 0
+
+
+def test_noisy_trace_bounded_switches():
+    """A trace oscillating across both thresholds switches at most once
+    per dwell window — hysteresis + dwell bound the flap rate even under
+    adversarial noise."""
+    cfg = _cfg(dwell=2)
+    trace = [(4, 4), (0, 4)] * 12
+    rungs = C.replay(cfg, trace)
+    flips = sum(1 for a, b in zip(rungs, rungs[1:]) if a != b)
+    assert flips <= len(trace) // cfg.dwell
+
+
+# -- purity / replay determinism ------------------------------------------
+
+def test_replay_is_deterministic():
+    cfg = _cfg(dwell=2, ema_alpha=0.3)
+    trace = [(i % 5, 4) for i in range(40)]
+    assert C.replay(cfg, trace) == C.replay(cfg, trace)
+
+
+def test_step_is_pure():
+    """Stepping the same (cfg, state, obs) twice yields equal values —
+    and never mutates the input state (frozen dataclass)."""
+    cfg = _cfg()
+    s0 = C.init_state(cfg)
+    a = C.step(cfg, s0, 3, 4)
+    b = C.step(cfg, s0, 3, 4)
+    assert a == b
+    assert s0 == C.init_state(cfg)
+    with pytest.raises(Exception):
+        s0.rung = 0
+
+
+def test_step_rejects_empty_round():
+    cfg = _cfg()
+    with pytest.raises(ValueError, match="at least one"):
+        C.step(cfg, C.init_state(cfg), 0, 0)
+
+
+def test_ema_seeds_then_folds():
+    cfg = _cfg(ema_alpha=0.5, dwell=10)              # dwell blocks switches
+    s, _ = C.step(cfg, C.init_state(cfg), 4, 4)
+    assert s.ema == 1.0                              # first round seeds
+    s, _ = C.step(cfg, s, 0, 4)
+    assert s.ema == pytest.approx(0.5)               # 0.5*0 + 0.5*1
+
+
+# -- default ladders ------------------------------------------------------
+
+def test_default_ladder_matches_cache_layout():
+    for name, pol in POLICIES.items():
+        if not pol.kv_quantized:
+            continue
+        ladder = C.default_ladder(name)
+        assert len(ladder) >= 2                      # a real ladder
+        for rung in ladder:
+            rp = POLICIES[rung]
+            assert (rp.fmt_kv, rp.kv_packed) == (pol.fmt_kv, pol.kv_packed)
+
+
+def test_default_ladder_rejects_raw_f32_cache():
+    with pytest.raises(ValueError, match="raw f32 cache"):
+        C.default_ladder("fp32")

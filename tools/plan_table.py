@@ -14,6 +14,12 @@ backend, priority, reference fallback + pinned tolerance, and the tests
     (`repro.runtime.tuner.KNOB_GRID`), and every record in a shipped
     tuned-defaults DB (`benchmarks/tuned/*.json`) names a live route +
     shape-class, carries only declared knobs, and hashes to its own key;
+  - every default draft-precision ladder (`repro.runtime.controller.
+    DEFAULT_LADDERS`) is servable: for every KV-quantized serving preset
+    the engine can pair a ladder with, each rung passes
+    `validate_policy_pair` and resolves a ``paged_decode`` route — a bad
+    ladder entry fails CI here, not the first adaptive request at
+    runtime;
   - every route whose predicate requires ``n_devices > 1`` (the sharded
     serving routes, the wire-compressed allreduce) names at least one
     test in the multi-device suite (`tests/test_distributed.py` /
@@ -164,6 +170,43 @@ def _tuned_defaults_errors() -> list:
     return errs
 
 
+def _ladder_errors() -> list:
+    """Audit the adaptive draft ladders: every serving preset with a
+    quantized KV cache must map to a default ladder whose every rung (a)
+    shares the serving cache layout (`validate_policy_pair`) and (b)
+    resolves a ``paged_decode`` route at an engine-shaped context — the
+    two things Engine construction would otherwise discover at runtime."""
+    from repro.core import exec_plan
+    from repro.core.policy import POLICIES
+    from repro.runtime import controller
+    from repro.serving.spec_decode import validate_policy_pair
+    ctx = dict(batch=4, page_size=8, max_pages=4, kv_heads=2, hd=16,
+               n_pages=32, n_devices=1)
+    errs = []
+    for serve_name, serve_pol in sorted(POLICIES.items()):
+        if not serve_pol.kv_quantized:
+            continue
+        try:
+            ladder = controller.default_ladder(serve_name)
+        except ValueError as exc:
+            errs.append(f"ladder[{serve_name}]: no default ladder "
+                        f"({exc})")
+            continue
+        for rung in ladder:
+            try:
+                rpol = validate_policy_pair(rung, serve_pol)
+            except ValueError as exc:
+                errs.append(f"ladder[{serve_name}]/{rung}: cache layout "
+                            f"mismatch ({exc})")
+                continue
+            try:
+                exec_plan.resolve("paged_decode", rpol, **ctx)
+            except exec_plan.PlanError as exc:
+                errs.append(f"ladder[{serve_name}]/{rung}: no "
+                            f"paged_decode route ({exc})")
+    return errs
+
+
 def collect():
     from repro.core import exec_plan
     rows, errors = [], []
@@ -183,6 +226,7 @@ def collect():
                     "(tests/test_distributed.py or tests/test_tp_*.py)")
             errors.extend(_knob_errors(e))
     errors.extend(_tuned_defaults_errors())
+    errors.extend(_ladder_errors())
     return rows, errors
 
 
